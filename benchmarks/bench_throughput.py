@@ -1,0 +1,65 @@
+"""Paper Fig. 2 (RQ1): system throughput, plus kernel microbenchmarks.
+
+- pairs/second of the full pipeline for walk-based vs GNN models (the paper's
+  2B-pair runtime comparison, scaled down; the walk-based pipeline should be
+  ~an order of magnitude faster per pair, Fig. 4).
+- per-kernel us/call (interpret mode on CPU: correctness-path timing; TPU
+  numbers come from the roofline analysis, not wall clock).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import dataset, emit, trainer
+
+
+def pipeline_throughput(quick: bool = True) -> None:
+    ds = dataset("toy" if quick else "rec15")
+    steps = 60 if quick else 200
+    for name, kw in (("walk-based", dict(gnn_type=None)),
+                     ("gnn-lightgcn", dict(gnn_type="lightgcn"))):
+        tr = trainer(ds, steps=steps, **kw)
+        t0 = time.perf_counter()
+        res = tr.train()
+        dt = time.perf_counter() - t0
+        pps = res.pairs_seen / dt
+        emit(f"throughput/{name}", dt / steps * 1e6, f"pairs_per_sec={pps:.0f}")
+
+
+def kernel_micro(quick: bool = True) -> None:
+    from repro.kernels import ops
+
+    def timeit(fn, *args, iters=20):
+        fn(*args)  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 8, 128))
+    m = jax.random.bernoulli(jax.random.PRNGKey(1), 0.7, (512, 8))
+    emit("kernel/seg_aggr_mean", timeit(lambda a, b: ops.seg_aggr(a, b, "mean"), x, m),
+         "shape=512x8x128")
+
+    hs = jax.random.normal(jax.random.PRNGKey(2), (512, 64))
+    emit("kernel/inbatch_loss", timeit(lambda a: ops.inbatch_loss(a, a), hs),
+         "P=512,d=64")
+
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 512, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 512, 2, 64))
+    emit("kernel/flash_attn", timeit(
+        lambda a, b: ops.flash_attention(a, b, b, causal=True), q, k),
+        "S=512,H=4,K=2,hd=64(interpret)")
+
+
+def run(quick: bool = True) -> None:
+    pipeline_throughput(quick)
+    kernel_micro(quick)
+
+
+if __name__ == "__main__":
+    run()

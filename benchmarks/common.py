@@ -1,0 +1,77 @@
+"""Shared benchmark harness: dataset/trainer builders + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per measured
+configuration) so ``python -m benchmarks.run`` output is machine-parsable;
+``derived`` carries the benchmark-specific metric (recall, speedup, ops).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import Graph4RecConfig, HeteroGNNConfig
+from repro.embedding import EmbeddingConfig, SlotSpec
+from repro.graph import DistributedGraphEngine, SPECS, generate
+from repro.sampling import EgoConfig, PairConfig, PipelineConfig
+from repro.train import Graph4RecTrainer, TrainerConfig
+from repro.walk import WalkConfig
+
+RELS = ("u2click2i", "i2click2u")
+
+
+def dataset(name: str = "toy", seed: int = 0):
+    return generate(SPECS[name], seed=seed)
+
+
+def trainer(
+    ds,
+    gnn_type: Optional[str] = "lightgcn",  # None -> walk-based
+    steps: int = 150,
+    side_info: bool = False,
+    neg_mode: str = "inbatch",
+    order: str = "walk_ego_pair",
+    relation_agg: str = "uniform",
+    dim: int = 32,
+    batch_pairs: int = 256,
+    num_negatives: int = 5,
+    seed: int = 0,
+    num_partitions: int = 4,
+) -> Graph4RecTrainer:
+    g = ds.graph
+    slots = (
+        (SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 3)) if side_info else ()
+    )
+    walk_based = gnn_type is None
+    loss = "inbatch_softmax" if neg_mode == "inbatch" else "neg_sampling"
+    mc = Graph4RecConfig(
+        embedding=EmbeddingConfig(num_nodes=g.num_nodes, dim=dim, slots=slots),
+        gnn=None if walk_based else HeteroGNNConfig(
+            gnn_type=gnn_type, num_relations=2, num_layers=2, dim=dim,
+            relation_agg=relation_agg),
+        fanouts=() if walk_based else (4, 3),
+        relations=RELS,
+        use_side_info=side_info,
+        loss=loss,
+    )
+    pc = PipelineConfig(
+        walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+        pair=PairConfig(win_size=2, neg_mode=neg_mode, num_negatives=num_negatives),
+        ego=None if walk_based else EgoConfig(relations=list(RELS), fanouts=[4, 3]),
+        order=order, batch_pairs=batch_pairs, walks_per_round=64,
+    )
+    eng = DistributedGraphEngine(g, num_partitions=num_partitions)
+    return Graph4RecTrainer(
+        ds, eng, mc, pc,
+        TrainerConfig(num_steps=steps, log_every=0, eval_max_users=128,
+                      sparse_lr=1.0, seed=seed),
+    )
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def fmt_recall(ev: Dict[str, float]) -> str:
+    return (f"icf={ev['icf']:.4f} ucf={ev['ucf']:.4f} u2i={ev['u2i']:.4f}")

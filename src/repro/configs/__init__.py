@@ -1,0 +1,2 @@
+from repro.configs.base import ArchSpec, ShapeSpec, SHAPES
+from repro.configs.registry import get_arch, ARCH_IDS, all_pairs

@@ -1,0 +1,334 @@
+"""Architecture/shape specs: the dry-run and benchmark surface.
+
+Every assigned architecture provides ``full()`` (exact paper config) and
+``reduced()`` (2-layer, d_model<=512, <=4 experts smoke variant) returning an
+``ArchSpec``. The spec knows how to build abstract params, input specs
+(ShapeDtypeStructs — never allocated), sharding specs, and the jittable
+step functions (train loss / prefill / one-token serve step) for each input
+shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import qwen2_vl as VLM
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def resolve_shape(shape) -> ShapeSpec:
+    """Accept a shape name or an explicit ShapeSpec (dry-run seq probes)."""
+    return SHAPES[shape] if isinstance(shape, str) else shape
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    kind: str  # "lm" | "vlm" | "whisper"
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    citation: str
+    lm: Optional[T.LMConfig] = None
+    whisper: Optional[W.WhisperConfig] = None
+    # vlm extras
+    n_patches: int = 0
+    grid_hw: Tuple[int, int] = (0, 0)
+    sub_quadratic: bool = False  # may run long_500k
+    # gradient-accumulation microbatches for train_4k (activation memory
+    # control on the big configs; global batch unchanged)
+    microbatches: int = 1
+    notes: str = ""
+
+    def unrolled(self) -> "ArchSpec":
+        """Variant with python-unrolled layers (true FLOP/byte analysis —
+        XLA's cost analysis counts while-loop bodies once)."""
+        if self.kind == "whisper":
+            return dataclasses.replace(
+                self, whisper=dataclasses.replace(self.whisper, scan_layers=False)
+            )
+        return dataclasses.replace(
+            self, lm=dataclasses.replace(self.lm, scan_layers=False)
+        )
+
+    def with_layers(self, n: int) -> "ArchSpec":
+        """Depth-reduced probe variant (same width/pattern, n layers).
+
+        Used by the dry-run's trip-count correction: XLA cost analysis counts
+        scan bodies once, so we compile 1- and 2-period probes unrolled and
+        extrapolate linearly in depth (exact — layers repeat per period)."""
+        if self.kind == "whisper":
+            return dataclasses.replace(
+                self, whisper=dataclasses.replace(self.whisper, n_layers=n)
+            )
+        lm = self.lm
+        p = lm.period()
+        assert n % p == 0, (n, p)
+        blocks = tuple(lm.block_list()[:p]) * (n // p) if lm.blocks else ()
+        return dataclasses.replace(
+            self, lm=dataclasses.replace(lm, n_layers=n, blocks=blocks)
+        )
+
+    @property
+    def depth_reps(self) -> int:
+        """Number of repeating-period units in the full depth."""
+        if self.kind == "whisper":
+            return self.whisper.n_layers
+        return self.lm.n_layers // self.lm.period()
+
+    @property
+    def period_layers(self) -> int:
+        return 1 if self.kind == "whisper" else self.lm.period()
+
+    # ------------------------------------------------------------- supports
+    def supports(self, shape: str) -> Tuple[bool, str]:
+        s = SHAPES[shape]
+        if s.name == "long_500k" and not self.sub_quadratic:
+            return False, "full-attention arch: long_500k skipped (see DESIGN.md)"
+        return True, ""
+
+    # ----------------------------------------------------------- parameters
+    def init_params(self, key: jax.Array):
+        if self.kind == "whisper":
+            return W.init_whisper_params(key, self.whisper)
+        return T.init_lm_params(key, self.lm)
+
+    def abstract_params(self):
+        if self.kind == "whisper":
+            return W.abstract_params(self.whisper)
+        return T.abstract_params(self.lm)
+
+    def param_pspecs(self):
+        if self.kind == "whisper":
+            return W.param_pspecs(self.whisper)
+        return T.param_pspecs(self.lm)
+
+    @property
+    def d_model(self) -> int:
+        return self.whisper.d_model if self.kind == "whisper" else self.lm.d_model
+
+    @property
+    def dtype(self):
+        return jnp.dtype(
+            self.whisper.dtype if self.kind == "whisper" else self.lm.dtype
+        )
+
+    # --------------------------------------------------------------- inputs
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        s = resolve_shape(shape)
+        B, S = s.global_batch, s.seq_len
+        i32 = jnp.int32
+        if s.kind in ("train", "prefill"):
+            if self.kind == "lm":
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                }
+            if self.kind == "vlm":
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                    "patch_embeds": jax.ShapeDtypeStruct(
+                        (B, self.n_patches, self.d_model), self.dtype
+                    ),
+                }
+            if self.kind == "whisper":
+                return {
+                    "audio_embeds": jax.ShapeDtypeStruct(
+                        (B, self.whisper.n_audio_frames, self.d_model), self.dtype
+                    ),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                }
+        # decode: ONE new token + the KV/state cache of seq_len
+        return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    def input_pspecs(self, shape) -> Dict[str, Any]:
+        from repro.models.sharding import spec as SP
+
+        s = resolve_shape(shape)
+        if s.kind in ("train", "prefill"):
+            if self.kind == "lm":
+                return {"tokens": SP("batch", None), "labels": SP("batch", None)}
+            if self.kind == "vlm":
+                return {
+                    "tokens": SP("batch", None),
+                    "labels": SP("batch", None),
+                    "patch_embeds": SP("batch", None, None),
+                }
+            if self.kind == "whisper":
+                return {
+                    "audio_embeds": SP("batch", None, None),
+                    "tokens": SP("batch", None),
+                    "labels": SP("batch", None),
+                }
+        return {"token": SP("batch", None)}
+
+    # ---------------------------------------------------------------- cache
+    def abstract_cache(self, shape):
+        s = resolve_shape(shape)
+        assert s.kind == "decode", shape
+        if self.kind == "whisper":
+            audio = jax.ShapeDtypeStruct(
+                (s.global_batch, self.whisper.n_audio_frames, self.d_model), self.dtype
+            )
+            return jax.eval_shape(
+                lambda p, a: W.init_cache(p, self.whisper, a, s.seq_len),
+                self.abstract_params(), audio,
+            )
+        return jax.eval_shape(
+            lambda: T.init_cache(self.lm, s.global_batch, s.seq_len)
+        )
+
+    def init_cache(self, params, shape):
+        s = resolve_shape(shape)
+        if self.kind == "whisper":
+            audio = jnp.zeros(
+                (s.global_batch, self.whisper.n_audio_frames, self.d_model), self.dtype
+            )
+            return W.init_cache(params, self.whisper, audio, s.seq_len)
+        return T.init_cache(self.lm, s.global_batch, s.seq_len)
+
+    def cache_pspecs(self):
+        if self.kind == "whisper":
+            return W.cache_pspecs(self.whisper)
+        return T.cache_pspecs(self.lm)
+
+    # ------------------------------------------------------- step functions
+    def make_train_loss(self) -> Callable:
+        if self.kind == "lm":
+            cfg = self.lm
+
+            def loss(params, batch):
+                return T.lm_loss(params, cfg, batch["tokens"], batch["labels"])
+
+            return loss
+        if self.kind == "vlm":
+            cfg, grid = self.lm, self.grid_hw
+
+            def loss(params, batch):
+                return VLM.vlm_loss(
+                    params, cfg, batch["tokens"], batch["labels"],
+                    batch["patch_embeds"], grid,
+                )
+
+            return loss
+        cfg = self.whisper
+
+        def loss(params, batch):
+            return W.loss(
+                params, cfg, batch["audio_embeds"], batch["tokens"], batch["labels"]
+            )
+
+        return loss
+
+    def make_train_step(self, optimizer) -> Callable:
+        import repro.train.optimizer as opt_lib
+
+        loss_fn = self.make_train_loss()
+        k = self.microbatches
+        scan_mb = (self.whisper.scan_layers if self.kind == "whisper"
+                   else self.lm.scan_layers)
+
+        def train_step(params, opt_state, batch):
+            if k == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                # gradient accumulation over k microbatches (batch dim split)
+                mbs = jax.tree_util.tree_map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+                )
+
+                def one(mb):
+                    return jax.value_and_grad(loss_fn)(params, mb)
+
+                if scan_mb:
+                    def body(acc, mb):
+                        l, g = one(mb)
+                        loss_acc, grad_acc = acc
+                        return (loss_acc + l,
+                                jax.tree_util.tree_map(jnp.add, grad_acc, g)), None
+
+                    zero = (jnp.zeros(()),
+                            jax.tree_util.tree_map(jnp.zeros_like, params))
+                    (loss, grads), _ = jax.lax.scan(body, zero, mbs)
+                else:  # python unroll (dry-run probes: true FLOP counts)
+                    loss = jnp.zeros(())
+                    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+                    for i in range(k):
+                        mb = jax.tree_util.tree_map(lambda x: x[i], mbs)
+                        l, g = one(mb)
+                        loss = loss + l
+                        grads = jax.tree_util.tree_map(jnp.add, grads, g)
+                loss = loss / k
+                grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+            updates, opt_state = optimizer.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return train_step
+
+    def make_prefill(self) -> Callable:
+        """Prefill: full forward, emit only the last-position logits."""
+        if self.kind == "whisper":
+            cfg = self.whisper
+
+            def prefill(params, batch):
+                enc = W.encode(params, cfg, batch["audio_embeds"])
+                logits = W.decode_train(params, cfg, enc, batch["tokens"])
+                return logits[:, -1, :]
+
+            return prefill
+        cfg = self.lm
+        if self.kind == "vlm":
+            grid, n_p = self.grid_hw, self.n_patches
+
+            def prefill(params, batch):
+                B, S = batch["tokens"].shape
+                x = VLM.merge_vision_embeds(params, cfg, batch["tokens"],
+                                            batch["patch_embeds"])
+                pos = VLM.mrope_positions(B, S, n_p, grid)
+                logits, _ = T.forward(params, cfg, inputs_embeds=x, positions=pos)
+                return logits[:, -1, :]
+
+            return prefill
+
+        def prefill(params, batch):
+            logits, _ = T.forward(params, cfg, batch["tokens"])
+            return logits[:, -1, :]
+
+        return prefill
+
+    def make_serve_step(self) -> Callable:
+        if self.kind == "whisper":
+            cfg = self.whisper
+
+            def serve_step(params, cache, batch):
+                return W.decode_step(params, cfg, cache, batch["token"])
+
+            return serve_step
+        cfg = self.lm
+
+        def serve_step(params, cache, batch):
+            return T.decode_step(params, cfg, cache, batch["token"])
+
+        return serve_step

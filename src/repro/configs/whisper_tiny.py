@@ -1,0 +1,35 @@
+"""Whisper-tiny backbone [arXiv:2212.04356].
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 — enc-dec; conv/mel frontend
+stubbed (input_specs supplies 1500 frame embeddings).
+"""
+from repro.configs.base import ArchSpec
+from repro.models.whisper import WhisperConfig
+
+ARCH_ID = "whisper-tiny"
+
+
+def full() -> ArchSpec:
+    return ArchSpec(
+        arch_id=ARCH_ID, kind="whisper", family="audio", citation="arXiv:2212.04356",
+        whisper=WhisperConfig(
+            name=ARCH_ID, vocab=51865, d_model=384, n_layers=4,
+            n_heads=6, n_kv=6, d_ff=1536, n_audio_frames=1500,
+        ),
+        sub_quadratic=False,
+        notes="decode_32k exercises the decoder cache beyond the trained "
+              "448-token context (lowering/sharding exercise, see DESIGN.md).",
+    )
+
+
+def reduced() -> ArchSpec:
+    return ArchSpec(
+        arch_id=ARCH_ID + "-smoke", kind="whisper", family="audio",
+        citation="arXiv:2212.04356",
+        whisper=WhisperConfig(
+            name=ARCH_ID + "-smoke", vocab=512, d_model=96, n_layers=2,
+            n_heads=4, n_kv=4, d_ff=192, n_audio_frames=32,
+            dtype="float32", remat=False,
+        ),
+        sub_quadratic=False,
+    )

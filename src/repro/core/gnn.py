@@ -1,0 +1,144 @@
+"""GNN zoo (Graph4Rec §3.5): per-relation message-passing layers.
+
+Every layer implements Eq. 1's AGGREGATE/COMBINE over the dense ego layout
+(see sampling/ego.py): given the self representations ``h_self`` (B, W, d),
+the sampled neighbor representations for ONE relation ``h_nbr`` (B, W, F, d)
+and a validity mask (B, W, F), produce the relation-wise output h_{v,r}
+(B, W, d_out). The relation mixture, residual and attention live one level
+up in core/hetero.py (Eq. 3), applied uniformly to every zoo member — the
+paper does the same "for a fair comparison".
+
+Zoo members and their aggregation:
+    gcn        mean(nbr ∪ self) -> W -> relu              (Kipf & Welling)
+    sage-mean  [self ‖ mean(nbr)] -> W -> relu            (GraphSAGE)
+    sage-sum   [self ‖ sum(nbr)]  -> W -> relu
+    gat        masked softmax attention over nbr -> W     (Veličković)
+    gin        MLP((1+eps)·self + sum(nbr))               (Xu et al.)
+    lightgcn   mean(nbr), NO transform/nonlinearity       (He et al.)
+    ngcf       W1(self+mean) + W2(mean(nbr⊙self)), lrelu  (Wang et al.)
+
+All functions are pure; parameters are plain dicts of jnp arrays. The mean
+aggregation routes through kernels/seg_aggr's op so the Pallas kernel is the
+production hot path (interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+GNN_TYPES = ("gcn", "sage-mean", "sage-sum", "gat", "gin", "lightgcn", "ngcf")
+
+# When enabled, masked mean/sum aggregation routes through the Pallas
+# seg_aggr kernel (kernels/seg_aggr.py) — the TPU production hot path.
+# Trace-time switch: flip before jit/trace (tests cover both paths).
+_USE_KERNEL_AGGR = False
+
+
+def use_kernel_aggregation(flag: bool) -> None:
+    global _USE_KERNEL_AGGR
+    _USE_KERNEL_AGGR = bool(flag)
+
+
+def _dense(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else (2.0 / (d_in + d_out)) ** 0.5
+    return jax.random.normal(key, (d_in, d_out)) * scale
+
+
+def _kernel_aggr(h_nbr: jnp.ndarray, mask: jnp.ndarray, mode: str) -> jnp.ndarray:
+    from repro.kernels import ops as kops
+
+    B, W, F, d = h_nbr.shape
+    out = kops.seg_aggr(h_nbr.reshape(B * W, F, d), mask.reshape(B * W, F), mode=mode)
+    return out.reshape(B, W, d)
+
+
+def masked_mean(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """(B,W,F,d),(B,W,F) -> (B,W,d); zero where no valid neighbor."""
+    if _USE_KERNEL_AGGR:
+        return _kernel_aggr(h_nbr, mask, "mean")
+    m = mask[..., None].astype(h_nbr.dtype)
+    s = (h_nbr * m).sum(axis=-2)
+    c = jnp.maximum(m.sum(axis=-2), 1.0)
+    return s / c
+
+
+def masked_sum(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    if _USE_KERNEL_AGGR:
+        return _kernel_aggr(h_nbr, mask, "sum")
+    return (h_nbr * mask[..., None].astype(h_nbr.dtype)).sum(axis=-2)
+
+
+# ------------------------------------------------------------------- layers
+def init_layer(key: jax.Array, gnn_type: str, dim: int) -> Params:
+    ks = jax.random.split(key, 4)
+    if gnn_type == "lightgcn":
+        return {}  # parameter-free by design
+    if gnn_type == "gcn":
+        return {"w": _dense(ks[0], dim, dim)}
+    if gnn_type in ("sage-mean", "sage-sum"):
+        return {"w": _dense(ks[0], 2 * dim, dim)}
+    if gnn_type == "gat":
+        return {
+            "w": _dense(ks[0], dim, dim),
+            "a_self": jax.random.normal(ks[1], (dim,)) * 0.1,
+            "a_nbr": jax.random.normal(ks[2], (dim,)) * 0.1,
+        }
+    if gnn_type == "gin":
+        return {
+            "eps": jnp.zeros(()),
+            "w1": _dense(ks[0], dim, dim),
+            "w2": _dense(ks[1], dim, dim),
+        }
+    if gnn_type == "ngcf":
+        return {"w1": _dense(ks[0], dim, dim), "w2": _dense(ks[1], dim, dim)}
+    raise ValueError(f"unknown gnn type {gnn_type!r}; choose from {GNN_TYPES}")
+
+
+def apply_layer(
+    params: Params,
+    gnn_type: str,
+    h_self: jnp.ndarray,  # (B, W, d)
+    h_nbr: jnp.ndarray,  # (B, W, F, d)
+    mask: jnp.ndarray,  # (B, W, F) bool
+) -> jnp.ndarray:
+    if gnn_type == "lightgcn":
+        # Linear propagation only — "transformation has no positive effect on CF".
+        return masked_mean(h_nbr, mask)
+    if gnn_type == "gcn":
+        agg = masked_mean(
+            jnp.concatenate([h_self[..., None, :], h_nbr], axis=-2),
+            jnp.concatenate([jnp.ones_like(mask[..., :1]), mask], axis=-1),
+        )
+        return jax.nn.relu(agg @ params["w"])
+    if gnn_type == "sage-mean":
+        agg = masked_mean(h_nbr, mask)
+        return jax.nn.relu(jnp.concatenate([h_self, agg], axis=-1) @ params["w"])
+    if gnn_type == "sage-sum":
+        agg = masked_sum(h_nbr, mask)
+        return jax.nn.relu(jnp.concatenate([h_self, agg], axis=-1) @ params["w"])
+    if gnn_type == "gat":
+        wh_self = h_self @ params["w"]  # (B,W,d)
+        wh_nbr = h_nbr @ params["w"]  # (B,W,F,d)
+        e = jax.nn.leaky_relu(
+            (wh_self * params["a_self"]).sum(-1)[..., None]
+            + (wh_nbr * params["a_nbr"]).sum(-1),
+            negative_slope=0.2,
+        )  # (B,W,F)
+        e = jnp.where(mask, e, -1e9)
+        att = jax.nn.softmax(e, axis=-1)
+        att = jnp.where(mask, att, 0.0)  # all-PAD rows -> zero output
+        return jax.nn.relu((att[..., None] * wh_nbr).sum(axis=-2))
+    if gnn_type == "gin":
+        agg = (1.0 + params["eps"]) * h_self + masked_sum(h_nbr, mask)
+        return jax.nn.relu(jax.nn.relu(agg @ params["w1"]) @ params["w2"])
+    if gnn_type == "ngcf":
+        m = masked_mean(h_nbr, mask)
+        return jax.nn.leaky_relu(
+            (h_self + m) @ params["w1"] + (m * h_self) @ params["w2"],
+            negative_slope=0.2,
+        )
+    raise ValueError(f"unknown gnn type {gnn_type!r}")

@@ -1,0 +1,66 @@
+"""Contrastive objectives (Eq. 2) and in-batch negative sampling (§3.6).
+
+Eq. 2 (skip-gram with negative sampling):
+
+    L = -log σ(y_vu) - Σ_m E_{w~P}[log σ(-y_{w u})],   y_vu = h_vᵀ h_u
+
+In-batch variant: within a batch of P positive pairs, every other dst in the
+batch serves as a negative for each src — a P×P score matrix with a
+softmax-CE on the diagonal. ``kernels/inbatch_loss`` provides the fused
+Pallas implementation; this module is the reference/jnp path (and delegates
+to the kernel when ``use_kernel=True``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def neg_sampling_loss(
+    h_src: jnp.ndarray,  # (P, d)
+    h_dst: jnp.ndarray,  # (P, d)
+    h_neg: jnp.ndarray,  # (P, M, d)
+) -> jnp.ndarray:
+    """Eq. 2 with explicit random negatives."""
+    pos = jnp.einsum("pd,pd->p", h_src, h_dst)
+    neg = jnp.einsum("pd,pmd->pm", h_src, h_neg)
+    return (
+        -jax.nn.log_sigmoid(pos).mean()
+        - jax.nn.log_sigmoid(-neg).sum(axis=-1).mean()
+    )
+
+
+def inbatch_softmax_loss(
+    h_src: jnp.ndarray,  # (P, d)
+    h_dst: jnp.ndarray,  # (P, d)
+    temperature: float = 1.0,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """In-batch negatives: maximize diag scores vs the rest of the batch."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.inbatch_loss(h_src, h_dst, temperature=temperature)
+    logits = (h_src @ h_dst.T) / temperature  # (P, P)
+    labels = jnp.arange(h_src.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return (logz - logits[labels, labels]).mean()
+
+
+def inbatch_sigmoid_loss(
+    h_src: jnp.ndarray, h_dst: jnp.ndarray, num_negatives: int = 5, key=None
+) -> jnp.ndarray:
+    """Eq. 2 shape with negatives drawn from the batch (paper's described
+    variant: 'minimizing the scores of other nodes in a batch')."""
+    P = h_src.shape[0]
+    pos = jnp.einsum("pd,pd->p", h_src, h_dst)
+    if key is None:
+        # deterministic stride-based in-batch negatives
+        idx = (jnp.arange(P)[:, None] + jnp.arange(1, num_negatives + 1)[None, :]) % P
+    else:
+        idx = jax.random.randint(key, (P, num_negatives), 0, P)
+    neg = jnp.einsum("pd,pmd->pm", h_src, h_dst[idx])
+    return (
+        -jax.nn.log_sigmoid(pos).mean()
+        - jax.nn.log_sigmoid(-neg).sum(axis=-1).mean()
+    )

@@ -1,0 +1,219 @@
+"""The Graph4Rec model: PS embeddings + relation-wise GNN + contrastive loss.
+
+This is the paper's §3 pipeline head: a training sample is a pair of ego
+graphs (or bare node ids for walk-based models); the model embeds every
+sampled node from the sharded table (plus side-info slots), runs the
+relation-wise GNN bottom-up, and scores src/dst representations under Eq. 2
+or the in-batch objective.
+
+Everything is pure-functional: ``init_model_params`` returns a dict pytree,
+``loss_fn`` is jit/pjit-able, and host-side batch conversion lives in
+``device_batch`` (ego layouts + padded slot values -> jnp arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hetero import HeteroGNNConfig, hetero_forward, init_hetero_params
+from repro.core import loss as loss_lib
+from repro.embedding import table as emb
+from repro.sampling.ego import EgoBatch, EgoConfig
+from repro.sampling.pipeline import TrainBatch
+
+PAD = -1
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph4RecConfig:
+    embedding: emb.EmbeddingConfig
+    gnn: Optional[HeteroGNNConfig]  # None -> walk-based (DeepWalk/metapath2vec)
+    fanouts: Tuple[int, ...] = ()
+    relations: Tuple[str, ...] = ()  # relation order used for ego sampling
+    use_side_info: bool = False
+    loss: str = "inbatch_softmax"  # inbatch_softmax | inbatch_sigmoid | neg_sampling
+    temperature: float = 1.0
+    use_kernel_loss: bool = False
+
+    @property
+    def is_walk_based(self) -> bool:
+        return self.gnn is None
+
+
+def init_model_params(key: jax.Array, cfg: Graph4RecConfig) -> Params:
+    k_emb, k_gnn = jax.random.split(key)
+    params: Params = {f"emb/{k}": v for k, v in emb.init_params(k_emb, cfg.embedding).items()}
+    if cfg.gnn is not None:
+        for k, v in init_hetero_params(k_gnn, cfg.gnn).items():
+            params[f"gnn/{k}"] = v
+    return params
+
+
+def split_params(params: Params) -> Tuple[Params, Params]:
+    e = {k[4:]: v for k, v in params.items() if k.startswith("emb/")}
+    g = {k[4:]: v for k, v in params.items() if k.startswith("gnn/")}
+    return e, g
+
+
+def sparse_dense_split(params: Params) -> Tuple[Params, Params]:
+    """Sparse (PS-resident) vs dense parameters — the paper's RQ on how
+    sparse/dense parameters affect performance keys off this split."""
+    sparse = {k: v for k, v in params.items() if k.startswith("emb/")}
+    dense = {k: v for k, v in params.items() if not k.startswith("emb/")}
+    return sparse, dense
+
+
+# ------------------------------------------------------------------ encoding
+def encode_ids(
+    params: Params,
+    cfg: Graph4RecConfig,
+    ids: jnp.ndarray,
+    slots: Optional[Mapping[str, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Walk-based encoder: the embedding row (+ side info) IS the output."""
+    e, _ = split_params(params)
+    return emb.embed_nodes(e, ids, slots, pad_id=PAD)
+
+
+def encode_ego(
+    params: Params,
+    cfg: Graph4RecConfig,
+    levels: Sequence[jnp.ndarray],  # level k ids (B, W_k)
+    level_slots: Optional[Sequence[Optional[Mapping[str, jnp.ndarray]]]] = None,
+) -> jnp.ndarray:
+    """GNN encoder over a batched relation-wise ego graph -> (B, d)."""
+    e, g = split_params(params)
+    feats = []
+    masks = []
+    for k, ids in enumerate(levels):
+        slots = level_slots[k] if level_slots else None
+        feats.append(emb.embed_nodes(e, ids, slots, pad_id=PAD))
+        masks.append(ids >= 0)
+    return hetero_forward(g, cfg.gnn, feats, masks, list(cfg.fanouts))
+
+
+def encode(params: Params, cfg: Graph4RecConfig, sample) -> jnp.ndarray:
+    if cfg.is_walk_based:
+        ids, slots = sample
+        return encode_ids(params, cfg, ids, slots)
+    levels, slots = sample
+    return encode_ego(params, cfg, levels, slots)
+
+
+# ---------------------------------------------------------------------- loss
+def loss_fn(params: Params, cfg: Graph4RecConfig, batch: Mapping) -> jnp.ndarray:
+    h_src = encode(params, cfg, batch["src"])
+    h_dst = encode(params, cfg, batch["dst"])
+    if cfg.loss == "inbatch_softmax":
+        return loss_lib.inbatch_softmax_loss(
+            h_src, h_dst, cfg.temperature, use_kernel=cfg.use_kernel_loss
+        )
+    if cfg.loss == "inbatch_sigmoid":
+        return loss_lib.inbatch_sigmoid_loss(h_src, h_dst)
+    if cfg.loss == "neg_sampling":
+        h_neg = encode(params, cfg, batch["neg"])
+        P = h_src.shape[0]
+        return loss_lib.neg_sampling_loss(
+            h_src, h_dst, h_neg.reshape(P, -1, h_neg.shape[-1])
+        )
+    raise ValueError(f"unknown loss {cfg.loss!r}")
+
+
+# --------------------------------------------------------- host-side batching
+def _slots_for_ids(
+    graph, ids: np.ndarray, slot_specs: Sequence[emb.SlotSpec]
+) -> Dict[str, np.ndarray]:
+    out = {}
+    for spec in slot_specs:
+        sf = graph.slots[spec.name]
+        out[spec.name] = emb.pad_slot_values(
+            sf.indptr, sf.values, ids.reshape(-1), spec.max_values, pad_id=PAD
+        ).reshape(ids.shape + (spec.max_values,))
+    return out
+
+
+def _ego_arrays(graph, ego: EgoBatch, cfg: Graph4RecConfig):
+    levels = [jnp.asarray(l) for l in ego.levels]
+    slots = None
+    if cfg.use_side_info:
+        slots = [
+            _slots_for_ids(graph, l, cfg.embedding.slots) for l in ego.levels
+        ]
+        slots = [
+            {k: jnp.asarray(v) for k, v in s.items()} for s in slots
+        ]
+    return (levels, slots)
+
+
+def device_batch(graph, batch: TrainBatch, cfg: Graph4RecConfig) -> Dict:
+    """Convert a host TrainBatch into jit-consumable arrays."""
+    out: Dict = {}
+    if cfg.is_walk_based:
+        for name, ids in (("src", batch.src_ids), ("dst", batch.dst_ids)):
+            slots = (
+                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, cfg.embedding.slots).items()}
+                if cfg.use_side_info
+                else None
+            )
+            out[name] = (jnp.asarray(ids), slots)
+        if batch.neg_ids is not None:
+            ids = batch.neg_ids.reshape(-1)
+            slots = (
+                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, cfg.embedding.slots).items()}
+                if cfg.use_side_info
+                else None
+            )
+            out["neg"] = (jnp.asarray(ids), slots)
+    else:
+        out["src"] = _ego_arrays(graph, batch.src_ego, cfg)
+        out["dst"] = _ego_arrays(graph, batch.dst_ego, cfg)
+        if batch.neg_ego is not None:
+            out["neg"] = _ego_arrays(graph, batch.neg_ego, cfg)
+    return out
+
+
+# ------------------------------------------------------------- full inference
+def encode_all_nodes(
+    params: Params,
+    cfg: Graph4RecConfig,
+    engine,
+    rng: np.random.Generator,
+    graph,
+    batch_size: int = 1024,
+) -> np.ndarray:
+    """Embed every node for recall evaluation (§4.2).
+
+    Walk-based: one table read. GNN: sample an eval ego graph per node and
+    encode (the paper evaluates the same way — inference-time neighbor
+    sampling)."""
+    N = graph.num_nodes
+    if cfg.is_walk_based:
+        ids = np.arange(N, dtype=np.int64)
+        outs = []
+        for lo in range(0, N, batch_size):
+            chunk = ids[lo : lo + batch_size]
+            slots = None
+            if cfg.use_side_info:
+                slots = {
+                    k: jnp.asarray(v)
+                    for k, v in _slots_for_ids(graph, chunk, cfg.embedding.slots).items()
+                }
+            outs.append(np.asarray(encode_ids(params, cfg, jnp.asarray(chunk), slots)))
+        return np.concatenate(outs, axis=0)
+
+    from repro.sampling.ego import sample_ego_batch
+
+    rels = list(cfg.relations) or graph.relation_names()[: cfg.gnn.num_relations]
+    ego_cfg = EgoConfig(relations=rels, fanouts=list(cfg.fanouts))
+    outs = []
+    for lo in range(0, N, batch_size):
+        ids = np.arange(lo, min(lo + batch_size, N), dtype=np.int64)
+        ego = sample_ego_batch(rng, engine, ids, ego_cfg)
+        levels, slots = _ego_arrays(graph, ego, cfg)
+        outs.append(np.asarray(encode_ego(params, cfg, levels, slots)))
+    return np.concatenate(outs, axis=0)

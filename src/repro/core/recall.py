@@ -1,0 +1,95 @@
+"""Recall strategies and metrics (paper §4.2): ICF, UCF, U2I @ K.
+
+- **ICF**: for each interacted item i of user u, recall the top-N most
+  similar items; recommend the top-K items most frequent in that pool.
+- **UCF**: recall the top-N most similar users u' of u; recommend the top-K
+  items most frequent among their interactions.
+- **U2I**: retrieve items directly by user-embedding · item-embedding.
+
+Recall@K = |recommended ∩ held-out| / |held-out| per user, averaged.
+Brute-force similarity (exact top-N) — datasets here are synthetic and small.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Sequence, Tuple
+
+import numpy as np
+
+
+def _topk(sim_row: np.ndarray, k: int, exclude: np.ndarray = None) -> np.ndarray:
+    if exclude is not None and len(exclude):
+        sim_row = sim_row.copy()
+        sim_row[exclude] = -np.inf
+    k = min(k, sim_row.shape[0])
+    idx = np.argpartition(-sim_row, k - 1)[:k]
+    return idx[np.argsort(-sim_row[idx])]
+
+
+def _normalize(x: np.ndarray) -> np.ndarray:
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+
+def _user_histories(train_pairs: np.ndarray, num_users: int) -> Dict[int, np.ndarray]:
+    hist: Dict[int, list] = {}
+    for u, i in train_pairs:
+        hist.setdefault(int(u), []).append(int(i))
+    return {u: np.unique(np.array(v, dtype=np.int64)) for u, v in hist.items()}
+
+
+def evaluate_recall(
+    user_emb: np.ndarray,  # (num_users, d)
+    item_emb: np.ndarray,  # (num_items, d)
+    train_pairs: np.ndarray,  # (Nt, 2) local (user, item) train interactions
+    eval_pairs: np.ndarray,  # (Ne, 2) local held-out (user, item)
+    top_k: int = 100,
+    top_n: int = 20,
+    max_users: int = 512,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Returns {"icf": recall, "ucf": recall, "u2i": recall} @ top_k."""
+    num_users, num_items = len(user_emb), len(item_emb)
+    ue = _normalize(user_emb)
+    ie = _normalize(item_emb)
+    hist = _user_histories(train_pairs, num_users)
+    held: Dict[int, set] = {}
+    for u, i in eval_pairs:
+        held.setdefault(int(u), set()).add(int(i))
+    users = [u for u in held if u in hist]
+    if not users:
+        return {"icf": 0.0, "ucf": 0.0, "u2i": 0.0}
+    rng = np.random.default_rng(seed)
+    if len(users) > max_users:
+        users = list(rng.choice(np.array(users), size=max_users, replace=False))
+
+    ii_sim = ie @ ie.T  # (I, I)
+    uu_sim = ue @ ue.T  # (U, U)
+    ui_sim = ue @ ie.T  # (U, I)
+
+    recalls = {"icf": [], "ucf": [], "u2i": []}
+    for u in users:
+        truth = held[u]
+        seen = hist[u]
+        # --- ICF: top-N similar items per history item, count frequency
+        votes = np.zeros(num_items)
+        for i in seen:
+            for j in _topk(ii_sim[i], top_n, exclude=np.array([i])):
+                votes[j] += 1
+        votes[seen] = -np.inf
+        rec = _topk(votes + 1e-9 * ui_sim[u], top_k)
+        recalls["icf"].append(len(truth & set(rec.tolist())) / len(truth))
+        # --- UCF: top-N similar users, aggregate their histories
+        votes = np.zeros(num_items)
+        sim_users = _topk(uu_sim[u], top_n + 1, exclude=np.array([u]))
+        for v, w in zip(sim_users, np.linspace(1.0, 0.5, len(sim_users))):
+            hv = hist.get(int(v))
+            if hv is not None:
+                votes[hv] += w
+        votes[seen] = -np.inf
+        rec = _topk(votes + 1e-9 * ui_sim[u], top_k)
+        recalls["ucf"].append(len(truth & set(rec.tolist())) / len(truth))
+        # --- U2I: direct embedding retrieval
+        row = ui_sim[u].copy()
+        row[seen] = -np.inf
+        rec = _topk(row, top_k)
+        recalls["u2i"].append(len(truth & set(rec.tolist())) / len(truth))
+    return {k: float(np.mean(v)) for k, v in recalls.items()}

@@ -1,0 +1,8 @@
+from repro.embedding.table import (
+    EmbeddingConfig, SlotSpec, init_params, abstract_params, param_specs,
+    lookup, ps_lookup, embed_nodes, pad_slot_values,
+    save_table, load_table, warm_start,
+)
+from repro.embedding.optimizer import (
+    RowAdagradState, rowwise_adagrad_init, rowwise_adagrad_update,
+)

@@ -1,0 +1,42 @@
+"""Row-wise sparse optimizers for the embedding tables (PS-side updates).
+
+The paper's parameter server applies asynchronous per-row updates; the SPMD
+equivalent is a synchronous dense update whose gradient is structurally
+sparse (only touched rows have nonzero grads — scatter-add cotangent of the
+gather). Row-wise AdaGrad keeps a single accumulator per row (the standard
+PS trick — 1/dim the memory of full AdaGrad) so untouched rows are no-ops up
+to float rounding.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RowAdagradState(NamedTuple):
+    accum: Dict[str, jnp.ndarray]  # per-table (rows, 1) accumulators
+
+
+def rowwise_adagrad_init(params: Mapping[str, jnp.ndarray]) -> RowAdagradState:
+    return RowAdagradState(
+        accum={k: jnp.zeros((v.shape[0], 1), v.dtype) for k, v in params.items()}
+    )
+
+
+def rowwise_adagrad_update(
+    params: Mapping[str, jnp.ndarray],
+    grads: Mapping[str, jnp.ndarray],
+    state: RowAdagradState,
+    lr: float = 0.1,
+    eps: float = 1e-8,
+) -> Tuple[Dict[str, jnp.ndarray], RowAdagradState]:
+    new_params: Dict[str, jnp.ndarray] = {}
+    new_accum: Dict[str, jnp.ndarray] = {}
+    for k, p in params.items():
+        g = grads[k]
+        acc = state.accum[k] + jnp.mean(g * g, axis=-1, keepdims=True)
+        new_params[k] = p - lr * g / (jnp.sqrt(acc) + eps)
+        new_accum[k] = acc
+    return new_params, RowAdagradState(accum=new_accum)

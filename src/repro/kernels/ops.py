@@ -1,0 +1,77 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with interpret=True — the kernel
+body runs in Python on CPU, validating the exact program that lowers to TPU.
+On a TPU backend interpret is off and the kernels compile to Mosaic.
+
+``inbatch_loss`` carries a custom VJP (softmax-CE closed-form gradients in
+jnp) so the fused forward is usable inside ``jax.grad`` training steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.inbatch_loss import inbatch_loss_rows_pallas
+from repro.kernels.seg_aggr import seg_aggr_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------ seg_aggr
+@functools.partial(jax.jit, static_argnames=("mode",))
+def seg_aggr(x: jnp.ndarray, mask: jnp.ndarray, mode: str = "mean") -> jnp.ndarray:
+    """(N, F, D), (N, F) -> (N, D) masked segment aggregation."""
+    return seg_aggr_pallas(x, mask, mode=mode, interpret=_interpret())
+
+
+# -------------------------------------------------------------- inbatch loss
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def inbatch_loss(h_src: jnp.ndarray, h_dst: jnp.ndarray, temperature: float = 1.0):
+    rows = inbatch_loss_rows_pallas(
+        h_src, h_dst, temperature=temperature, interpret=_interpret()
+    )
+    return rows.mean()
+
+
+def _inbatch_fwd(h_src, h_dst, temperature):
+    return inbatch_loss(h_src, h_dst, temperature), (h_src, h_dst)
+
+
+def _inbatch_bwd(temperature, res, g):
+    h_src, h_dst = res
+    P = h_src.shape[0]
+    logits = (h_src @ h_dst.T).astype(jnp.float32) / temperature
+    soft = jax.nn.softmax(logits, axis=-1)
+    dlogits = (soft - jnp.eye(P)) * (g / (P * temperature))
+    dsrc = (dlogits @ h_dst.astype(jnp.float32)).astype(h_src.dtype)
+    ddst = (dlogits.T @ h_src.astype(jnp.float32)).astype(h_dst.dtype)
+    return dsrc, ddst
+
+
+inbatch_loss.defvjp(_inbatch_fwd, _inbatch_bwd)
+
+
+# ---------------------------------------------------------------- attention
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, hd) — model layout
+    k: jnp.ndarray,  # (B, S, K, hd)
+    v: jnp.ndarray,  # (B, S, K, hd)
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Flash attention in the model's (B, S, H, hd) layout."""
+    qh = jnp.swapaxes(q, 1, 2)  # (B, H, S, hd)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_pallas(
+        qh, kh, vh, causal=causal, window=window, interpret=_interpret()
+    )
+    return jnp.swapaxes(out, 1, 2)

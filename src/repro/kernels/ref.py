@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert the kernels (interpret=True on CPU)
+match these references.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ seg_aggr
+def seg_aggr_ref(
+    x: jnp.ndarray,  # (N, F, D) neighbor features
+    mask: jnp.ndarray,  # (N, F) bool validity
+    mode: str = "mean",
+) -> jnp.ndarray:
+    """Masked segment aggregation over the neighbor axis -> (N, D)."""
+    m = mask[..., None].astype(x.dtype)
+    if mode == "sum":
+        return (x * m).sum(axis=1)
+    if mode == "mean":
+        s = (x * m).sum(axis=1)
+        c = jnp.maximum(m.sum(axis=1), 1.0)
+        return s / c
+    if mode == "max":
+        neg = jnp.where(mask[..., None], x, NEG_INF)
+        out = neg.max(axis=1)
+        any_valid = mask.any(axis=1, keepdims=True)
+        return jnp.where(any_valid, out, 0.0)
+    raise ValueError(mode)
+
+
+# -------------------------------------------------------------- inbatch loss
+def inbatch_loss_ref(
+    h_src: jnp.ndarray, h_dst: jnp.ndarray, temperature: float = 1.0
+) -> jnp.ndarray:
+    """In-batch softmax CE with diagonal positives -> scalar mean loss."""
+    logits = (h_src @ h_dst.T).astype(jnp.float32) / temperature
+    labels = jnp.arange(h_src.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return (logz - logits[labels, labels]).mean()
+
+
+def inbatch_loss_rows_ref(
+    h_src: jnp.ndarray, h_dst: jnp.ndarray, temperature: float = 1.0
+) -> jnp.ndarray:
+    logits = (h_src @ h_dst.T).astype(jnp.float32) / temperature
+    labels = jnp.arange(h_src.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return logz - logits[labels, labels]
+
+
+# -------------------------------------------------------------- attention
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, K, hd)
+    v: jnp.ndarray,  # (B, Skv, K, hd)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """GQA attention oracle with causal and sliding-window masking."""
+    B, Sq, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    ki = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    att = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", att, v)
+    return out.reshape(B, Sq, H, hd)

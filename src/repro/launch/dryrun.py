@@ -1,0 +1,323 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) and emit
+roofline terms.
+
+512 placeholder CPU devices stand in for 2 pods × 256 TPU v5e chips. The
+XLA_FLAGS line above MUST run before any other import — jax locks the device
+count at first init (do NOT set this globally; smoke tests want 1 device).
+
+Per (arch, shape, mesh) the dry-run performs THREE compiles:
+
+1. **full** — the production program (lax.scan over layer periods). This is
+   the lowering/sharding proof and the source of memory_analysis().
+2. **probe@1, probe@2** — the same program at 1 and 2 repeating periods of
+   depth, with layers and attention chunk-loops python-unrolled. XLA's
+   HloCostAnalysis counts a while-loop body ONCE regardless of trip count,
+   so per-layer FLOPs/bytes/collective-bytes are recovered exactly by linear
+   extrapolation:  total = P1 + (reps-1)·(P2-P1)   (layers repeat per
+   period, so depth-linearity is exact by construction).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out benchmarks/results/dryrun.json
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, get_arch  # noqa: E402
+from repro.configs.registry import ARCH_IDS  # noqa: E402
+from repro.launch import roofline as RL  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.sharding import (  # noqa: E402
+    MULTI_POD_RULES, SINGLE_POD_RULES, decode_rules, use_rules,
+)
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.utils import get_logger  # noqa: E402
+
+log = get_logger("repro.dryrun")
+
+
+# ----------------------------------------------------------------- counting
+def _count(tree) -> float:
+    return float(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def _count_active(spec, aparams) -> float:
+    """Active params for MoE archs: expert weights scaled by top_k/E."""
+    total = _count(aparams)
+    if spec.kind == "whisper" or spec.lm is None or spec.lm.moe is None:
+        return total
+    moe = spec.lm.moe
+    inactive_frac = 1.0 - moe.top_k / moe.num_experts
+    moe_params = 0.0
+    for off_block in aparams["layers"]:
+        if "moe" in off_block:
+            for name, leaf in off_block["moe"].items():
+                if name != "router":
+                    moe_params += float(np.prod(leaf.shape))
+    return total - moe_params * inactive_frac
+
+
+# ----------------------------------------------------------------- sharding
+def _shardify(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _opt_pspecs(param_specs):
+    return opt_lib.AdamState(
+        step=P(),
+        mu=param_specs,
+        nu=jax.tree_util.tree_map(
+            lambda p: p, param_specs, is_leaf=lambda x: isinstance(x, P)
+        ),
+    )
+
+
+# ------------------------------------------------------------------ lowering
+def compile_spec(spec, shape, mesh, rules):
+    """Lower + compile one ArchSpec variant. Returns compiled executable."""
+    from repro.configs.base import resolve_shape
+
+    s = resolve_shape(shape)
+    shape = s
+    with jax.set_mesh(mesh), use_rules(rules):
+        aparams = spec.abstract_params()
+        pspecs = spec.param_pspecs()
+        batch = spec.input_specs(shape)
+        bspecs = spec.input_pspecs(shape)
+        if s.kind == "train":
+            opt = opt_lib.adam(1e-3, weight_decay=0.01)
+            aopt = jax.eval_shape(opt.init, aparams)
+            ospecs = _opt_pspecs(pspecs)
+            fn = spec.make_train_step(opt)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_shardify(mesh, pspecs), _shardify(mesh, ospecs),
+                              _shardify(mesh, bspecs)),
+                donate_argnums=(0, 1),
+            ).lower(aparams, aopt, batch)
+        elif s.kind == "prefill":
+            fn = spec.make_prefill()
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_shardify(mesh, pspecs), _shardify(mesh, bspecs)),
+            ).lower(aparams, batch)
+        else:  # decode
+            acache = spec.abstract_cache(shape)
+            cspecs = spec.cache_pspecs()
+            fn = spec.make_serve_step()
+            lowered = jax.jit(
+                fn,
+                in_shardings=(_shardify(mesh, pspecs), _shardify(mesh, cspecs),
+                              _shardify(mesh, bspecs)),
+                donate_argnums=(1,),
+            ).lower(aparams, acache, batch)
+        return lowered.compile()
+
+
+def _costs(compiled, chips: int) -> Tuple[float, float, float, Dict[str, float]]:
+    ca = compiled.cost_analysis() or {}
+    cb, breakdown = RL.collective_bytes(compiled.as_text(), default_group=chips)
+    return (float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)),
+            cb, breakdown)
+
+
+def run_one(arch_id: str, shape: str, multi_pod: bool, reduced: bool = False,
+            probes: bool = True, spec=None) -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch_id, "shape": shape, "mesh": mesh_name}
+    try:
+        spec = spec if spec is not None else get_arch(arch_id, reduced=reduced)
+        ok, reason = spec.supports(shape)
+        if not ok:
+            return {**base, "status": "skipped", "reason": reason}
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(np.prod(mesh.devices.shape))
+        rules = MULTI_POD_RULES if multi_pod else SINGLE_POD_RULES
+        if shape == "long_500k":
+            rules = decode_rules(rules)
+
+        # ---- 1. full production compile (scan layers): lowering proof + memory
+        t0 = time.perf_counter()
+        compiled = compile_spec(spec, shape, mesh, rules)
+        compile_s = time.perf_counter() - t0
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "total_gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         + ma.output_size_in_bytes) / 1e9,
+        }
+        f_raw, b_raw, c_raw, _ = _costs(compiled, chips)
+
+        # ---- 2. probes (unrolled): trip-count-corrected costs.
+        # XLA counts scan bodies once, so probe modules are python-unrolled.
+        # Decode steps have no chunk loops -> two depth probes at full cache
+        # size suffice (cost is depth-linear). Train/prefill probes would be
+        # enormous unrolled at S=32k, so we exploit that per-layer cost is
+        # EXACTLY a + b·S + c·S² (attention is quadratic, everything else
+        # linear/constant): probe at S ∈ {1k, 2k, 4k} × depth {1p, 2p},
+        # solve the polynomial per layer and for the base, and evaluate at
+        # the target S.
+        if probes:
+            p = spec.period_layers
+            reps = spec.depth_reps
+            s_full = SHAPES[shape]
+            # probes run mb=1: microbatching is FLOP/byte-neutral (k grad
+            # steps at B/k each) but multiplies unrolled HLO size by k; the
+            # only production delta is k× per-step weight re-gathers, noted
+            # in EXPERIMENTS.md §Dry-run caveats.
+            spec = dataclasses.replace(spec, microbatches=1)
+            if s_full.kind == "decode":
+                probe1 = compile_spec(spec.with_layers(p).unrolled(), shape, mesh, rules)
+                probe2 = compile_spec(spec.with_layers(2 * p).unrolled(), shape, mesh, rules)
+                c1s = _costs(probe1, chips)
+                c2s = _costs(probe2, chips)
+                flops, bytes_acc, cbytes = (
+                    a + (reps - 1) * (b - a)
+                    for a, b in zip(c1s[:3], c2s[:3])
+                )
+                bd1, bd2 = c1s[3], c2s[3]
+                breakdown = {
+                    k: bd1.get(k, 0.0)
+                    + (reps - 1) * (bd2.get(k, 0.0) - bd1.get(k, 0.0))
+                    for k in set(bd1) | set(bd2)
+                }
+            else:
+                s_probe = [1024, 2048, 4096]
+                per_depth = []  # [depth][s_idx] -> (flops, bytes, coll)
+                for depth in (p, 2 * p):
+                    row = []
+                    for sp in s_probe:
+                        shp = dataclasses.replace(s_full, seq_len=sp)
+                        comp = compile_spec(
+                            spec.with_layers(depth).unrolled(), shp, mesh, rules
+                        )
+                        row.append(_costs(comp, chips)[:3])
+                    per_depth.append(row)
+
+                def _fit_eval(vals3, s_target):
+                    """Exact quadratic through 3 (S, val) points."""
+                    coef = np.polyfit(np.array(s_probe, float), np.array(vals3), 2)
+                    return float(np.polyval(coef, s_target))
+
+                out3 = []
+                for j in range(3):  # flops, bytes, coll
+                    layer = [
+                        per_depth[1][i][j] - per_depth[0][i][j] for i in range(3)
+                    ]
+                    nonlayer = [per_depth[0][i][j] - layer[i] for i in range(3)]
+                    out3.append(
+                        _fit_eval(nonlayer, s_full.seq_len)
+                        + reps * _fit_eval(layer, s_full.seq_len)
+                    )
+                flops, bytes_acc, cbytes = (max(v, 0.0) for v in out3)
+                breakdown = {}
+        else:
+            flops, bytes_acc, cbytes = f_raw, b_raw, c_raw
+            breakdown = {}
+
+        # ---- 3. roofline terms
+        aparams = spec.abstract_params()
+        n_params = _count(aparams)
+        n_active = _count_active(spec, aparams)
+        s = SHAPES[shape]
+        tokens = s.global_batch * (s.seq_len if s.kind != "decode" else 1)
+        model_flops = RL.model_flops_estimate(
+            n_params, n_active, tokens, "train" if s.kind == "train" else "fwd"
+        )
+        compute_s = flops / RL.PEAK_FLOPS
+        memory_s = bytes_acc / RL.HBM_BW
+        collective_s = cbytes / RL.LINK_BW
+        dominant = max((("compute", compute_s), ("memory", memory_s),
+                        ("collective", collective_s)), key=lambda kv: kv[1])[0]
+        out = {
+            **base, "status": "ok", "chips": chips, "kind": s.kind,
+            "compile_s": compile_s, "memory": mem,
+            "n_params": n_params, "n_params_active": n_active,
+            "flops_per_device": flops, "bytes_per_device": bytes_acc,
+            "collective_bytes_per_device": cbytes,
+            "collective_breakdown": breakdown,
+            "raw_scan_counts": {"flops": f_raw, "bytes": b_raw, "coll": c_raw},
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant,
+            "model_flops": model_flops,
+            "useful_ratio": model_flops / (flops * chips) if flops else 0.0,
+        }
+        log.info(
+            "OK %-20s %-12s %-8s compile=%5.1fs mem=%7.2fGB "
+            "comp=%.2es mem=%.2es coll=%.2es dom=%-10s useful=%.2f",
+            arch_id, shape, mesh_name, compile_s, mem["total_gb"],
+            compute_s, memory_s, collective_s, dominant, out["useful_ratio"],
+        )
+        return out
+    except Exception as e:
+        log.error("FAIL %s %s %s: %s", arch_id, shape, mesh_name, e)
+        return {**base, "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the depth-probe compiles (lowering proof only)")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                results.append(run_one(arch, shape, multi, reduced=args.reduced,
+                                       probes=not args.no_probes))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    existing = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f):
+                existing[(r["arch"], r["shape"], r["mesh"])] = r
+    for r in results:
+        existing[(r["arch"], r["shape"], r["mesh"])] = r
+    with open(args.out, "w") as f:
+        json.dump(list(existing.values()), f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                print(f"  ERROR {r['arch']} {r['shape']} {r['mesh']}: {r['error']}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+)
+
+"""Perf hillclimbing driver (§Perf): compile named variants of one
+(arch × shape) and report the roofline-term deltas.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen2-0.5b \
+        --shape train_4k --variants baseline,gather_head
+
+Each variant is a set of LMConfig/ArchSpec overrides (the perf knobs).
+Results append to benchmarks/results/perf.json for EXPERIMENTS.md §Perf.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+from typing import Dict  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.launch.dryrun import run_one  # noqa: E402
+from repro.utils import get_logger  # noqa: E402
+
+log = get_logger("repro.perf")
+
+# named variants: LMConfig field overrides (+ ArchSpec-level 'microbatches')
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    "gather_head": {"gather_head": True},
+    "block_q_512": {"block_q": 512},
+    "block_q_1024": {"block_q": 1024},
+    "remat_dots": {"remat_policy": "dots"},
+    "gather_head+block_q_512": {"gather_head": True, "block_q": 512},
+    "gather_head+remat_dots": {"gather_head": True, "remat_policy": "dots"},
+    "all": {"gather_head": True, "block_q": 512, "remat_policy": "dots"},
+    "mb_2": {"__microbatches": 2},
+    "mb_1": {"__microbatches": 1},
+    "gather_head+mb_2": {"gather_head": True, "__microbatches": 2},
+    "cache_seq": {"shard_cache_seq": True},
+    "cache_seq+gather_head": {"shard_cache_seq": True, "gather_head": True},
+    "pad_heads": {"pad_heads": True},
+    "pad_heads+block_q_512": {"pad_heads": True, "block_q": 512},
+    "pad_heads+block_q_1024": {"pad_heads": True, "block_q": 1024},
+}
+
+
+def apply_variant(spec, overrides: Dict):
+    arch_over = {k[2:]: v for k, v in overrides.items() if k.startswith("__")}
+    lm_over = {k: v for k, v in overrides.items() if not k.startswith("__")}
+    if lm_over:
+        spec = dataclasses.replace(spec, lm=dataclasses.replace(spec.lm, **lm_over))
+    if arch_over:
+        spec = dataclasses.replace(spec, **arch_over)
+    return spec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline,gather_head")
+    ap.add_argument("--out", default="benchmarks/results/perf.json")
+    args = ap.parse_args()
+
+    results = []
+    for name in args.variants.split(","):
+        spec = apply_variant(get_arch(args.arch), VARIANTS[name])
+        r = run_one(args.arch, args.shape, multi_pod=False, spec=spec)
+        r["variant"] = name
+        results.append(r)
+        if r["status"] == "ok":
+            log.info(
+                "%-28s comp=%.3es mem=%.3es coll=%.3es dev_mem=%.2fGB dom=%s",
+                name, r["compute_s"], r["memory_s"], r["collective_s"],
+                r["memory"]["total_gb"], r["dominant"],
+            )
+
+    existing = []
+    if os.path.exists(args.out):
+        existing = json.load(open(args.out))
+    existing.extend(results)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    json.dump(existing, open(args.out, "w"), indent=1)
+    print(f"appended {len(results)} variants -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

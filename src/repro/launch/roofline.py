@@ -1,0 +1,175 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) we derive, per chip:
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+    memory_s     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective_s = collective_bytes_per_device / link_bw    (50 GB/s/link)
+
+``compiled.cost_analysis()`` reports per-partition flops / bytes accessed
+(verified empirically on the CPU backend). Collective bytes are NOT in
+cost_analysis: we parse the post-SPMD optimized HLO and sum the *wire bytes
+per device* of every collective under ring-algorithm cost models:
+
+    all-gather          result_bytes × (g-1)/g
+    all-reduce          result_bytes × 2(g-1)/g
+    reduce-scatter      result_bytes × (g-1)        (operand = result × g)
+    all-to-all          result_bytes × (g-1)/g
+    collective-permute  result_bytes
+
+with g the participant-group size parsed from replica_groups (iota
+``[n,g]<=[...]`` or explicit ``{{...}}`` form).
+
+MODEL_FLOPS uses the 6·N·D convention (train; 2·N·D forward-only), with
+N_active for MoE; the ratio MODEL_FLOPS / (HLO_FLOPs × chips) measures how
+much compiled compute is "useful" (catches remat recompute, GSPMD padding
+waste, dispatch overhead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 per chip, TPU v5e
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int) -> Tuple[float, Dict[str, float]]:
+    """Per-device wire bytes summed over all collectives in the module."""
+    per_op: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if f" {op}-start(" not in line and f" {op}(" not in line and not line.strip().startswith("ROOT"):
+            # matched a -done or metadata line; only count the op itself
+            if f"{op}-done" in line:
+                continue
+        b = _shape_bytes(m.group("shape"))
+        g = max(2, _group_size(line, default_group))
+        if op == "all-gather":
+            wire = b * (g - 1) / g
+        elif op == "all-reduce":
+            wire = b * 2 * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = b * (g - 1)
+        elif op == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = float(b)
+        per_op[op] = per_op.get(op, 0.0) + wire
+    return sum(per_op.values()), per_op
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, float]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs × chips)
+    n_params: float
+    n_params_active: float
+    arg_bytes_per_device: float
+    temp_bytes_per_device: float
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    compiled,
+    model_flops: float,
+    n_params: float,
+    n_params_active: float,
+) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    cbytes, breakdown = collective_bytes(compiled.as_text(), default_group=chips)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = cbytes / LINK_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    ma = compiled.memory_analysis()
+    arg_b = float(getattr(ma, "argument_size_in_bytes", 0) or 0)
+    tmp_b = float(getattr(ma, "temp_size_in_bytes", 0) or 0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=bytes_acc,
+        collective_bytes_per_device=cbytes, collective_breakdown=breakdown,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        n_params=n_params, n_params_active=n_params_active,
+        arg_bytes_per_device=arg_b, temp_bytes_per_device=tmp_b,
+    )
+
+
+def model_flops_estimate(
+    n_params: float, n_active: float, tokens: float, kind: str
+) -> float:
+    """6·N·D train, 2·N·D forward-only (prefill), 2·N_active per decoded token."""
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

@@ -1,0 +1,1 @@
+from repro.models import layers, transformer, moe, mamba2, whisper, qwen2_vl, sharding

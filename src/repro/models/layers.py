@@ -1,0 +1,441 @@
+"""Shared transformer building blocks: norms, RoPE/M-RoPE, GQA attention
+(with full / sliding-window KV caches), MLPs.
+
+Pure-functional: params are plain dicts; every init has a matching apply.
+Weights are initialized in ``param_dtype`` (bf16 for the production configs)
+and activations computed in ``dtype``. Logical sharding annotations use
+models/sharding.py so the same code lowers on CPU and on the pod meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+# -------------------------------------------------------------------- norms
+def init_rmsnorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"]
+
+
+def init_layernorm(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return y * p["scale"] + p["bias"]
+
+
+def apply_norm(kind: str, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(p, x) if kind == "rms" else layernorm(p, x)
+
+
+def init_norm(kind: str, dim: int, dtype) -> Params:
+    return init_rmsnorm(dim, dtype) if kind == "rms" else init_layernorm(dim, dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_cos_sin(
+    positions: jnp.ndarray,  # (B, S) int — or (B, S, 3) for M-RoPE
+    head_dim: int,
+    theta: float = 10000.0,
+    mrope_sections: Optional[Sequence[int]] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Rotary angle tables (B, S, head_dim/2).
+
+    M-RoPE (Qwen2-VL, arXiv:2409.12191): the head_dim/2 frequency channels
+    are split into sections (temporal, height, width); each section takes its
+    angle from the corresponding coordinate of the 3-D position id. Text
+    tokens carry identical coordinates in all three channels, which makes
+    M-RoPE degenerate to standard RoPE for pure text.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    inv_freq = jnp.asarray(inv_freq)
+    if mrope_sections is None:
+        assert positions.ndim == 2, positions.shape
+        ang = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,half)
+    else:
+        assert positions.ndim == 3 and positions.shape[-1] == len(mrope_sections)
+        assert sum(mrope_sections) == half, (mrope_sections, half)
+        chunks = []
+        lo = 0
+        for si, sec in enumerate(mrope_sections):
+            chunks.append(
+                positions[..., si, None].astype(jnp.float32) * inv_freq[lo : lo + sec]
+            )
+            lo += sec
+        ang = jnp.concatenate(chunks, axis=-1)  # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate-half convention; x: (B, S, H, head_dim), cos/sin: (B, S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    causal: bool = True
+    sliding_window: Optional[int] = None  # None = full attention
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, ...]] = None  # Qwen2-VL
+    use_rope: bool = True  # whisper uses learned/sinusoidal positions instead
+    block_q: int = 256  # chunked-attention query block
+    # python-unroll the chunk loop (dry-run cost analysis: XLA counts scan
+    # bodies once; see LMConfig.scan_layers)
+    chunk_unroll: bool = False
+    # decode: keep the KV cache sequence-sharded over `model` (context-
+    # parallel decode) instead of flat-head-sharded
+    shard_cache_seq: bool = False
+    # pad query heads up to a multiple of 16 and shard attention by heads:
+    # removes the context-parallel AV all-reduce and q gather at the cost of
+    # (Hp-H)/H padded compute. Requires Hp % n_kv == 0. Beyond-paper knob.
+    pad_heads: bool = False
+
+    @property
+    def n_heads_padded(self) -> int:
+        if not self.pad_heads:
+            return self.n_heads
+        hp = -(-self.n_heads // 16) * 16
+        assert hp % self.n_kv == 0, (hp, self.n_kv)
+        return hp
+
+
+def init_attn(key: jax.Array, cfg: AttnConfig, dtype) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, H, K, hd = cfg.d_model, cfg.n_heads_padded, cfg.n_kv, cfg.head_dim
+    sc = 1.0 / np.sqrt(d)
+    wq = jax.random.normal(kq, (d, H * hd)) * sc
+    wo = jax.random.normal(ko, (H * hd, d)) * (1.0 / np.sqrt(H * hd))
+    if H != cfg.n_heads:
+        # padded heads: zero their output rows so they never contribute
+        mask = (np.arange(H) < cfg.n_heads).repeat(hd)
+        wo = wo * mask[:, None]
+    p: Params = {
+        "wq": wq.astype(dtype),
+        "wk": (jax.random.normal(kk, (d, K * hd)) * sc).astype(dtype),
+        "wv": (jax.random.normal(kv, (d, K * hd)) * sc).astype(dtype),
+        "wo": wo.astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _proj_qkv(p: Params, cfg: AttnConfig, x: jnp.ndarray):
+    B, S, _ = x.shape
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = x @ p["wk"] + (p.get("bk", 0.0))
+    v = x @ p["wv"] + (p.get("bv", 0.0))
+    q = q.reshape(B, S, cfg.n_heads_padded, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv, cfg.head_dim)
+    return q, k, v
+
+
+def gqa_scores_mask(
+    S_q: int, S_kv: int, causal: bool, window: Optional[int], q_offset: int = 0
+) -> jnp.ndarray:
+    """(S_q, S_kv) additive mask: causal and/or sliding-window band."""
+    qi = jnp.arange(S_q)[:, None] + q_offset
+    ki = jnp.arange(S_kv)[None, :]
+    ok = jnp.ones((S_q, S_kv), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, K, hd)
+    v: jnp.ndarray,  # (B, Skv, K, hd)
+    mask: Optional[jnp.ndarray],  # broadcastable to (B, 1, Sq, Skv) additive
+) -> jnp.ndarray:
+    """Grouped-query attention, naive jnp path (materializes Sq×Skv logits).
+
+    Fine for decode (Sq=1) and small smoke shapes; full-sequence training /
+    prefill uses chunked_gqa_attention (O(bq·Skv) live logits) or the Pallas
+    flash kernel on TPU."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(hd)
+    if mask is not None:
+        logits = logits + mask[:, :, None, :, :] if mask.ndim == 4 else logits + mask
+    att = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", att, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_gqa_attention(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Skv, K, hd)
+    v: jnp.ndarray,  # (B, Skv, K, hd)
+    causal: bool,
+    window: Optional[int],
+    block_q: int = 256,
+    q_offset: int = 0,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Memory-efficient attention: lax.scan over query blocks.
+
+    The XLA analogue of flash attention — at most (B, H, bq, Skv) logits are
+    live per step instead of (B, H, Sq, Skv). This is the production default
+    for train/prefill shapes (the naive path would need S²-sized HBM temps —
+    230+ GB/device at train_4k scale)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    bq = min(block_q, Sq)
+    assert Sq % bq == 0, (Sq, bq)
+    nq = Sq // bq
+    qg = q.reshape(B, nq, bq, K, G, hd)
+    kpos = jnp.arange(k.shape[1])[None, :]
+
+    def step(_, inp):
+        qi, qblk = inp  # scalar block idx, (B, bq, K, G, hd)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, k) / np.sqrt(hd)
+        qpos = (qi * bq + jnp.arange(bq))[:, None] + q_offset
+        ok = jnp.ones((bq, k.shape[1]), bool)
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        logits = jnp.where(ok[None, None, None], logits.astype(jnp.float32), NEG_INF)
+        att = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", att, v)  # (B, bq, K, G, hd)
+        return None, out
+
+    # remat each block: backward recomputes the (bq, Skv) logits instead of
+    # storing all nq of them (the flash-attention memory contract)
+    step = jax.checkpoint(step)
+    if unroll:
+        outs = jnp.stack(
+            [step(None, (jnp.asarray(i), qg[:, i]))[1] for i in range(nq)]
+        )
+    else:
+        _, outs = jax.lax.scan(
+            step, None, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0))
+        )  # (nq, B, bq, K, G, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+
+
+def attn_forward(
+    p: Params,
+    cfg: AttnConfig,
+    x: jnp.ndarray,  # (B, S, d)
+    positions: Optional[jnp.ndarray] = None,  # (B,S) or (B,S,3)
+    use_flash: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(p, cfg, x)
+    if cfg.use_rope:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        cos, sin = rope_cos_sin(
+            positions, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections
+        )
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # Attention parallelism. Default: CONTEXT parallelism — head counts
+    # (9, 14, 28…) rarely divide the 16-way model axis, so K/V shard the
+    # kv-sequence dim over `model`; each chunk computes partial
+    # (bq × S/16) logits and GSPMD reduces softmax stats + the AV
+    # contraction with all-reduces. With pad_heads, q-heads are padded to a
+    # 16 multiple and attention shards by HEADS instead: K/V replicate
+    # (one small gather) and the AV all-reduce disappears. Pinning here
+    # (not inside the loop) hoists resharding out of the chunk scan/remat.
+    if cfg.pad_heads:
+        q = constrain(q, "batch", None, "heads", None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    else:
+        q = constrain(q, "batch", None, None, None)
+        k = constrain(k, "batch", "seq", None, None)
+        v = constrain(v, "batch", "seq", None, None)
+    if use_flash:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.sliding_window
+        )
+    elif S > cfg.block_q and S % cfg.block_q == 0:
+        out = chunked_gqa_attention(
+            q, k, v, cfg.causal, cfg.sliding_window,
+            block_q=cfg.block_q, unroll=cfg.chunk_unroll,
+        )
+    else:
+        mask = gqa_scores_mask(S, S, cfg.causal, cfg.sliding_window)
+        out = gqa_attention(q, k, v, mask)
+    out = constrain(out, "batch", None, None, None)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+# ------------------------------------------------------------------ caches
+@dataclasses.dataclass
+class KVCacheSpec:
+    """Full cache keeps S_max slots; sliding-window cache keeps a ring of
+    ``window`` slots (this is what makes long_500k decode feasible).
+
+    Layout is FLATTENED on the head axis — (B, S, n_kv*head_dim) — so the
+    last dim divides the 16-way model axis for every assigned arch (raw
+    n_kv of 2/3/4/8 would not), keeping the cache shardable as a jit input."""
+
+    batch: int
+    s_max: int  # cache capacity: seq_len (full) or window (SWA ring)
+    n_kv: int
+    head_dim: int
+    ring: bool  # True -> ring buffer indexed modulo s_max
+
+
+def init_kv_cache(spec: KVCacheSpec, dtype) -> Dict[str, jnp.ndarray]:
+    shape = (spec.batch, spec.s_max, spec.n_kv * spec.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attn_decode_step(
+    p: Params,
+    cfg: AttnConfig,
+    cache: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,  # (B, 1, d)
+    t: jnp.ndarray,  # scalar int32 — absolute decode position
+    use_flash: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode against the KV cache (full or ring)."""
+    B = x.shape[0]
+    S_max = cache["k"].shape[1]
+    ring = cfg.sliding_window is not None and S_max == cfg.sliding_window
+    q, k_new, v_new = _proj_qkv(p, cfg, x)
+    if cfg.use_rope:
+        pos = jnp.broadcast_to(t[None, None], (B, 1))
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(
+                t[None, None, None], (B, 1, len(cfg.mrope_sections))
+            )
+        cos, sin = rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    slot = jnp.where(ring, t % S_max, jnp.minimum(t, S_max - 1))
+    kv_flat = cfg.n_kv * cfg.head_dim
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.reshape(B, 1, kv_flat), (0, slot, 0)
+    )
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.reshape(B, 1, kv_flat), (0, slot, 0)
+    )
+    if cfg.shard_cache_seq:
+        # context-parallel decode: keep S sharded; softmax stats + the AV
+        # partial output all-reduce instead of gathering the cache
+        k = constrain(k, "batch", "cache_seq", None)
+        v = constrain(v, "batch", "cache_seq", None)
+    else:
+        k = constrain(k, "batch", None, "kv_heads")
+        v = constrain(v, "batch", None, "kv_heads")
+    k_heads = k.reshape(B, S_max, cfg.n_kv, cfg.head_dim)
+    v_heads = v.reshape(B, S_max, cfg.n_kv, cfg.head_dim)
+    # validity: slot s holds absolute position (ring: t - ((t - s) mod S_max))
+    s_idx = jnp.arange(S_max)
+    if ring:
+        age = (slot - s_idx) % S_max  # 0 = newest
+        valid = (age <= jnp.minimum(t, S_max - 1))
+    else:
+        valid = s_idx <= t
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]  # (1,1,1,S)
+    out = gqa_attention(q, k_heads, v_heads, mask)  # (B,1,H,hd)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": k, "v": v}
+
+
+# ----------------------------------------------------------- cross-attention
+def init_cross_attn(key: jax.Array, cfg: AttnConfig, dtype) -> Params:
+    return init_attn(key, cfg, dtype)
+
+
+def cross_attn_forward(
+    p: Params,
+    cfg: AttnConfig,
+    x: jnp.ndarray,  # (B, Sq, d) decoder states
+    enc_kv: Tuple[jnp.ndarray, jnp.ndarray],  # precomputed (B, Se, K, hd) k, v
+) -> jnp.ndarray:
+    B, Sq, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0.0)).reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+    k, v = enc_kv
+    out = gqa_attention(q, k, v, None)
+    return out.reshape(B, Sq, -1) @ p["wo"]
+
+
+def encode_cross_kv(p: Params, cfg: AttnConfig, enc: jnp.ndarray):
+    B, Se, _ = enc.shape
+    k = (enc @ p["wk"] + p.get("bk", 0.0)).reshape(B, Se, cfg.n_kv, cfg.head_dim)
+    v = (enc @ p["wv"] + p.get("bv", 0.0)).reshape(B, Se, cfg.n_kv, cfg.head_dim)
+    return k, v
+
+
+# --------------------------------------------------------------------- MLPs
+def init_mlp(key: jax.Array, kind: str, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    sc_in = 1.0 / np.sqrt(d_model)
+    sc_out = 1.0 / np.sqrt(d_ff)
+    if kind == "swiglu":
+        return {
+            "wg": (jax.random.normal(k1, (d_model, d_ff)) * sc_in).astype(dtype),
+            "wu": (jax.random.normal(k2, (d_model, d_ff)) * sc_in).astype(dtype),
+            "wd": (jax.random.normal(k3, (d_ff, d_model)) * sc_out).astype(dtype),
+        }
+    if kind == "gelu":
+        return {
+            "wu": (jax.random.normal(k1, (d_model, d_ff)) * sc_in).astype(dtype),
+            "bu": jnp.zeros((d_ff,), dtype),
+            "wd": (jax.random.normal(k2, (d_ff, d_model)) * sc_out).astype(dtype),
+            "bd": jnp.zeros((d_model,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def mlp_forward(p: Params, kind: str, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+        h = constrain(h, "batch", None, "ffn")
+        return h @ p["wd"]
+    h = jax.nn.gelu(x @ p["wu"] + p["bu"])
+    h = constrain(h, "batch", None, "ffn")
+    return h @ p["wd"] + p["bd"]

@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) mixer layer.
+
+Training/prefill uses the *chunked SSD algorithm*: the sequence is split
+into chunks of Q tokens; within a chunk the recurrence is computed in its
+quadratic "attention-like" dual form (MXU-friendly matmuls), and a short
+scan over chunk summaries carries the (H, P, N) state across chunks. This is
+the TPU-native adaptation: instead of the CUDA selective-scan kernel we keep
+all large contractions as matmuls over hardware-aligned tiles and reduce the
+sequential dependency to L/Q scan steps.
+
+Decode keeps a constant-size state h (B, H, P, N) and a depthwise-conv ring
+buffer — O(1) per token, which is what makes long_500k feasible.
+
+Shapes: H heads (model-sharded), P headdim, N d_state, G=1 B/C groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+    # python-unroll the chunk recurrence (dry-run probes: XLA counts scan
+    # bodies once; see transformer.LMConfig.scan_layers)
+    chunk_unroll: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.headdim == 0
+        return self.d_inner // self.headdim
+
+
+def init_mamba2(key: jax.Array, cfg: Mamba2Config, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    sc = 1.0 / np.sqrt(d)
+    # dt bias spread log-uniform in [dt_min, dt_max] (mamba init)
+    u = jax.random.uniform(ks[6], (H,))
+    dt_init = jnp.exp(
+        u * (np.log(cfg.dt_max) - np.log(cfg.dt_min)) + np.log(cfg.dt_min)
+    )
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "wz": (jax.random.normal(ks[0], (d, di)) * sc).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, di)) * sc).astype(dtype),
+        "wB": (jax.random.normal(ks[2], (d, N)) * sc).astype(dtype),
+        "wC": (jax.random.normal(ks[3], (d, N)) * sc).astype(dtype),
+        "wdt": (jax.random.normal(ks[4], (d, H)) * sc).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (di, d)) * (1.0 / np.sqrt(di))).astype(dtype),
+        # depthwise causal conv over the x/B/C channels
+        "conv": (jax.random.normal(ks[7], (cfg.conv_width, di + 2 * N)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32) + jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+    }
+
+
+def _proj_xbcdt(p: Params, cfg: Mamba2Config, u: jnp.ndarray):
+    """u (B,S,d) -> z, xbc (pre-conv), dt_raw."""
+    z = u @ p["wz"]  # (B,S,di)
+    xbc = jnp.concatenate([u @ p["wx"], u @ p["wB"], u @ p["wC"]], axis=-1)
+    dt_raw = (u @ p["wdt"]).astype(jnp.float32)  # (B,S,H)
+    return z, xbc, dt_raw
+
+
+def _causal_depthwise_conv(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """w (W, Ch), x (B, S, Ch) -> (B, S, Ch) causal depthwise conv + silu."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out)
+
+
+def _split_xbc(cfg: Mamba2Config, xbc: jnp.ndarray):
+    di, N = cfg.d_inner, cfg.d_state
+    x = xbc[..., :di]
+    Bm = xbc[..., di : di + N]
+    Cm = xbc[..., di + N :]
+    return x, Bm, Cm
+
+
+def _gated_norm(p: Params, y: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    # RMSNorm(y) * silu(z), mamba2's norm-then-gate
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    yn = (y * jax.lax.rsqrt(var + 1e-6).astype(y.dtype)) * p["norm_scale"]
+    return yn * jax.nn.silu(z)
+
+
+def mamba2_forward(p: Params, cfg: Mamba2Config, u: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence chunked SSD. u: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = u.shape
+    H, P, N, Q = cfg.n_heads, cfg.headdim, cfg.d_state, min(cfg.chunk, S)
+    assert S % Q == 0, (S, Q)
+    Nc = S // Q
+
+    z, xbc, dt_raw = _proj_xbcdt(p, cfg, u)
+    xbc = _causal_depthwise_conv(p["conv"], xbc)
+    x, Bm, Cm = _split_xbc(cfg, xbc)
+    x = constrain(x.reshape(B, S, H, P), "batch", None, "mamba_heads", None)
+
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])  # (B,S,H) f32
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    # per-chunk views, chunk axis first for the scan
+    dA = jnp.moveaxis((dt * A).reshape(B, Nc, Q, H), 1, 0)  # (Nc,B,Q,H)
+    dtc = jnp.moveaxis(dt.reshape(B, Nc, Q, H), 1, 0)
+    xc = jnp.moveaxis(x.reshape(B, Nc, Q, H, P), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(B, Nc, Q, N).astype(jnp.float32), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B, Nc, Q, N).astype(jnp.float32), 1, 0)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(h_prev, inp):
+        """One SSD chunk: dual quadratic form inside, recurrence across.
+
+        Only (B,Q,Q,H)-sized temporaries are live (one chunk), instead of the
+        (B,Nc,Q,Q,H) full-sequence tensor — the TPU-native VMEM-sized tiling
+        of the SSD algorithm, expressed at the XLA level."""
+        da, dt_q, xq, bq_, cq = inp  # (B,Q,H), (B,Q,H), (B,Q,H,P), (B,Q,N)x2
+        lcum = jnp.cumsum(da, axis=1)  # (B,Q,H)
+        # intra-chunk: y_diag[t] = Σ_{s<=t} C_t·B_s exp(l_t-l_s) dt_s x_s
+        diff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,Q,Q,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bqn,bsn->bqs", cq, bq_)  # (B,Q,Q)
+        w = scores[..., None] * decay * dt_q[:, None, :, :]  # (B,Q,Q,H)
+        y_diag = jnp.einsum("bqsh,bshp->bqhp", w.astype(xq.dtype), xq)
+        # inter-chunk: y_off[t] = exp(l_t)·C_t·h_prev
+        y_off = jnp.einsum(
+            "bqn,bhpn->bqhp", cq.astype(xq.dtype), h_prev
+        ) * jnp.exp(lcum)[..., None].astype(xq.dtype)
+        # state update: h = exp(l_Q)·h_prev + Σ_s exp(l_Q-l_s) dt_s B_s⊗x_s
+        decay_to_end = jnp.exp(lcum[:, -1:, :] - lcum)  # (B,Q,H)
+        wB = (decay_to_end * dt_q)[..., None] * bq_[:, :, None, :]  # (B,Q,H,N)
+        s_chunk = jnp.einsum("bqhn,bqhp->bhpn", wB.astype(xq.dtype), xq)
+        h = h_prev * jnp.exp(lcum[:, -1, :])[..., None, None].astype(xq.dtype) + s_chunk
+        return h, y_diag + y_off
+
+    chunk_step = jax.checkpoint(chunk_step)
+    h0 = jnp.zeros((B, H, P, N), x.dtype)
+    if cfg.chunk_unroll:
+        ys = []
+        h = h0
+        for c in range(Nc):
+            h, y_c = chunk_step(h, (dA[c], dtc[c], xc[c], Bc[c], Cc[c]))
+            ys.append(y_c)
+        y = jnp.stack(ys)  # (Nc,B,Q,H,P)
+    else:
+        _, y = jax.lax.scan(chunk_step, h0, (dA, dtc, xc, Bc, Cc))
+
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, H, P)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, cfg.d_inner)
+    return _gated_norm(p, y, z) @ p["wo"]
+
+
+# ------------------------------------------------------------------- decode
+def init_mamba_cache(cfg: Mamba2Config, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.headdim, cfg.d_state), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def mamba2_decode_step(
+    p: Params, cfg: Mamba2Config, cache: Dict[str, jnp.ndarray], u: jnp.ndarray
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token state update. u: (B, 1, d_model)."""
+    B = u.shape[0]
+    H, P, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    z, xbc, dt_raw = _proj_xbcdt(p, cfg, u)  # (B,1,·)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, W, Ch)
+    conv_out = jax.nn.silu((hist * p["conv"][None]).sum(axis=1, keepdims=True))
+    new_conv = hist[:, 1:, :]
+    x, Bm, Cm = _split_xbc(cfg, conv_out)
+    x = x.reshape(B, H, P)
+    dt = jax.nn.softplus(dt_raw[:, 0] + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))  # (B,H)
+    dBx = jnp.einsum(
+        "bh,bn,bhp->bhpn", dt.astype(x.dtype), Bm[:, 0], x
+    )
+    h = cache["ssm"] * a[..., None, None].astype(x.dtype) + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h) + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, cfg.d_inner)
+    out = _gated_norm(p, y, z) @ p["wo"]
+    return out, {"ssm": h, "conv": new_conv}

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based expert dispatch.
+
+TPU-native (GShard/Switch style): token->expert routing is expressed as two
+dense einsums against a (group, token, expert, capacity) one-hot dispatch
+tensor, so the layer is fully static-shape. Under the pod mesh the expert
+axis is sharded on ``model`` and token groups on ``data`` — XLA lowers the
+dispatch/combine einsums to all-to-alls, the same communication pattern as
+the paper's relation-wise aggregation (tokens->experts ≈ nodes->relations).
+
+Capacity C = ceil(tokens_per_group * top_k / num_experts * capacity_factor);
+overflow tokens are dropped (standard GShard semantics) and their residual
+path carries them. ``group_size`` bounds the dispatch einsum's quadratic
+term — groups are split off the sequence axis.
+
+An auxiliary load-balance loss (Switch-style f·P) is returned for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 1024  # tokens per routing group (bounds dispatch cost)
+    mlp_kind: str = "swiglu"
+    router_jitter: float = 0.0
+    # "ep": expert-parallel (experts sharded on model axis; requires
+    #       num_experts % model_size == 0 — OLMoE 64, Jamba 16).
+    # "tp": tensor-parallel within each expert (per-expert ffn dim sharded;
+    #       Mixtral's 8 experts on a 16-way model axis).
+    shard: str = "ep"
+
+
+def init_moe(key: jax.Array, cfg: MoEConfig, dtype) -> Params:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    sc_in = 1.0 / np.sqrt(d)
+    sc_out = 1.0 / np.sqrt(f)
+    p: Params = {
+        # router kept in f32 — routing decisions are precision-sensitive
+        "router": jax.random.normal(kr, (d, E)).astype(jnp.float32) * sc_in,
+        "wu": (jax.random.normal(ku, (E, d, f)) * sc_in).astype(dtype),
+        "wd": (jax.random.normal(kd, (E, f, d)) * sc_out).astype(dtype),
+    }
+    if cfg.mlp_kind == "swiglu":
+        p["wg"] = (jax.random.normal(kg, (E, d, f)) * sc_in).astype(dtype)
+    return p
+
+
+def _capacity(cfg: MoEConfig, tokens_per_group: int) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.num_experts))
+    return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def moe_forward(
+    p: Params, cfg: MoEConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    g = min(cfg.group_size, S)
+    assert S % g == 0, (S, g)
+    G = B * (S // g)
+    xt = x.reshape(G, g, d)
+    xt = constrain(xt, "expert_group", None, None)
+    E, K = cfg.num_experts, cfg.top_k
+    C = _capacity(cfg, g)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])  # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, K)  # (G, g, K)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    # --- build dispatch/combine tensors with per-expert position counters
+    dispatch = jnp.zeros((G, g, E, C), dtype=x.dtype)
+    combine = jnp.zeros((G, g, E, C), dtype=x.dtype)
+    counts = jnp.zeros((G, E), dtype=jnp.int32)
+    for kk in range(K):
+        m = jax.nn.one_hot(top_idx[..., kk], E, dtype=jnp.int32)  # (G, g, E)
+        pos = jnp.cumsum(m, axis=1) - m + counts[:, None, :]  # (G, g, E)
+        keep = (m > 0) & (pos < C)
+        counts = counts + (m * keep).sum(axis=1)
+        oh = jax.nn.one_hot(jnp.clip(pos, 0, C - 1), C, dtype=x.dtype)  # (G,g,E,C)
+        oh = oh * keep[..., None].astype(x.dtype)
+        dispatch = dispatch + oh
+        # keep combine in x.dtype — an f32 combine would upcast the MoE
+        # output and contaminate the whole residual stream with f32 copies
+        combine = combine + oh * top_vals[..., kk, None, None].astype(x.dtype)
+        combine = combine.astype(x.dtype)
+
+    # --- expert compute (expert axis model-sharded -> all-to-all at the einsums)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xt)  # (E,G,C,d)
+    if cfg.shard == "ep":
+        # shard experts on `model` AND token groups on `data`: the all-to-all
+        # moves tokens to their experts; every expert-side tensor stays
+        # (E/16, G/16, C, ·) so no bwd resharding can materialize a full
+        # (E·G·C, d_ff) block on one device.
+        xe = constrain(xe, "experts", "expert_group", None, None)
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["wg"])) * jnp.einsum(
+            "egcd,edf->egcf", xe, p["wu"]
+        )
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, p["wu"]))
+    if cfg.shard == "ep":
+        h = constrain(h, "experts", "expert_group", None, None)
+    else:  # tp: per-expert hidden dim sharded on the model axis
+        h = constrain(h, None, "expert_group", None, "ffn")
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wd"])  # (E,G,C,d)
+    if cfg.shard == "ep":
+        ye = constrain(ye, "experts", "expert_group", None, None)
+    else:
+        ye = constrain(ye, None, "expert_group", None, None)
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye)  # (G,g,d)
+    y = constrain(y, "expert_group", None, None)
+
+    # --- Switch aux loss: E * Σ_e f_e · P_e
+    f_e = (dispatch.sum(axis=-1) > 0).astype(jnp.float32).mean(axis=1)  # (G,E)
+    P_e = probs.mean(axis=1)  # (G, E)
+    aux = (E * (f_e * P_e).sum(axis=-1)).mean()
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,86 @@
+"""Qwen2-VL language backbone (arXiv:2409.12191): M-RoPE + dynamic resolution.
+
+The vision encoder (ViT + merger) is a STUB per the brief: ``input_specs``
+supplies precomputed patch embeddings (B, n_patches, d_model). This module
+implements what remains the LM's job:
+
+- merging patch embeddings into the token stream at the image placeholder
+  span (here: a fixed span right after BOS — dynamic position is a data
+  question, not a model one);
+- computing the 3-D M-RoPE position ids: text tokens get (t, t, t); vision
+  tokens share one temporal index and spread (h, w) over the patch grid,
+  matching the paper's multimodal rotary scheme.
+
+Everything else (GQA attention, SwiGLU, sharding) is the shared
+transformer.py stack with ``mrope_sections`` set.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.sharding import constrain
+
+
+def merge_vision_embeds(
+    params: Dict,
+    cfg: T.LMConfig,
+    tokens: jnp.ndarray,  # (B, S)
+    patch_embeds: jnp.ndarray,  # (B, Np, d) — stub ViT output
+    image_start: int = 1,  # patches occupy [image_start, image_start + Np)
+) -> jnp.ndarray:
+    """Token embeddings with the image span overwritten by patch embeds."""
+    x = T.embed_tokens(params, cfg, tokens)
+    Np = patch_embeds.shape[1]
+    x = jax.lax.dynamic_update_slice(
+        x, patch_embeds.astype(x.dtype), (0, image_start, 0)
+    )
+    return constrain(x, "batch", None, None)
+
+
+def mrope_positions(
+    batch: int,
+    seq_len: int,
+    n_patches: int,
+    grid_hw: Tuple[int, int],
+    image_start: int = 1,
+) -> jnp.ndarray:
+    """(B, S, 3) position ids: (temporal, height, width).
+
+    Text: (i, i, i). Vision span: temporal frozen at image_start; height/width
+    walk the patch grid. Text after the image resumes at
+    image_start + max(grid) + 1 (paper's continuity rule).
+    """
+    H, W = grid_hw
+    assert H * W >= n_patches, (grid_hw, n_patches)
+    i = jnp.arange(seq_len)
+    in_img = (i >= image_start) & (i < image_start + n_patches)
+    after = i >= image_start + n_patches
+    pi = i - image_start  # patch index within span
+    ph = pi // W
+    pw = pi % W
+    resume = image_start + max(H, W)  # temporal id where post-image text resumes
+    shift = resume - (image_start + n_patches)  # applied to trailing text
+    t_pos = jnp.where(in_img, image_start, jnp.where(after, i + shift, i))
+    h_pos = jnp.where(in_img, image_start + ph, t_pos)
+    w_pos = jnp.where(in_img, image_start + pw, t_pos)
+    pos = jnp.stack([t_pos, h_pos, w_pos], axis=-1)
+    return jnp.broadcast_to(pos[None], (batch, seq_len, 3)).astype(jnp.int32)
+
+
+def vlm_loss(
+    params: Dict,
+    cfg: T.LMConfig,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    patch_embeds: jnp.ndarray,
+    grid_hw: Tuple[int, int],
+) -> jnp.ndarray:
+    B, S = tokens.shape
+    Np = patch_embeds.shape[1]
+    x = merge_vision_embeds(params, cfg, tokens, patch_embeds)
+    pos = mrope_positions(B, S, Np, grid_hw)
+    return T.lm_loss(params, cfg, tokens, labels, positions=pos, inputs_embeds=x)

@@ -1,0 +1,91 @@
+"""Logical-axis sharding rules for the model substrate.
+
+Model code annotates tensors with *logical* axis names; the launcher
+installs rules mapping them to physical mesh axes. This keeps every model
+definition mesh-agnostic: the same forward works on a single CPU device
+(empty rules), the 16x16 single-pod mesh, and the 2x16x16 multi-pod mesh.
+
+    batch   -> ("pod", "data") on multi-pod, ("data",) on single pod, () on CPU
+    heads / kv_heads / ffn / experts / vocab / mamba_heads -> "model"
+    seq / d_model / head_dim / state -> replicated
+
+Usage:
+    with use_rules(POD_RULES):            # launcher
+        ...jit(train_step).lower(...)
+    x = constrain(x, "batch", None, "heads", None)   # model code
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+CPU_RULES: Dict[str, Axis] = {}  # everything replicated
+
+SINGLE_POD_RULES: Dict[str, Axis] = {
+    "batch": ("data",),
+    "fsdp": ("data",),  # weight/optimizer-state sharding over the data axis
+    # Megatron-style sequence parallelism: inter-layer activations shard the
+    # sequence dim over the model axis (16x smaller activation residency /
+    # remat saves); attention/mamba gather the sequence on entry.
+    "seq": "model",
+    "cache_seq": "model",  # decode KV-cache sequence axis (context-parallel)
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "vocab": "model",
+    "mamba_heads": "model",
+    "expert_group": ("data",),  # token groups for MoE all-to-all
+}
+
+MULTI_POD_RULES: Dict[str, Axis] = {
+    **SINGLE_POD_RULES,
+    "batch": ("pod", "data"),
+    "expert_group": ("pod", "data"),
+    # weights replicated across pods (pure DP on the pod axis): "fsdp" stays data
+}
+
+def decode_rules(base: Dict[str, Axis]) -> Dict[str, Axis]:
+    """Rules for tiny-batch decode (long_500k, batch=1): batch replicated,
+    state sharded on heads only."""
+    r = dict(base)
+    r["batch"] = None
+    r["expert_group"] = None
+    r["seq"] = None  # decode steps have S=1 (cache_seq stays sharded)
+    return r
+
+
+def current_rules() -> Dict[str, Axis]:
+    return getattr(_STATE, "rules", CPU_RULES)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, Axis]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def spec(*logical: Optional[str]) -> P:
+    """Build a PartitionSpec from logical axis names under current rules."""
+    rules = current_rules()
+    return P(*[rules.get(name) if name else None for name in logical])
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the current rules (no-op on CPU rules)."""
+    rules = current_rules()
+    if not rules:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical))

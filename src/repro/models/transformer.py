@@ -1,0 +1,475 @@
+"""Unified decoder-only LM substrate for the assigned architectures.
+
+One config describes every family: each layer is a (mixer, ffn) block where
+mixer ∈ {attn, mamba} and ffn ∈ {dense, moe, none}. Dense GQA archs are
+(attn, dense) everywhere; Mixtral/OLMoE are (attn, moe); Mamba2 is
+(mamba, none); Jamba interleaves (mamba|attn, dense|moe) in its 1:7 pattern.
+
+Layers are executed with ``lax.scan`` over the *repeating period* of the
+block pattern (params stacked per offset), which keeps HLO size and compile
+time flat in depth — 62-layer DeepSeek compiles the same program as a
+2-layer smoke model, just with bigger leading dims. ``remat`` wraps the
+scanned body for training memory.
+
+The vocab embedding is the paper's PS-sharded table: rows on the ``model``
+axis, pulled via masked-gather+psum (embedding/table.ps_lookup semantics;
+under pjit we express it as a plain gather + sharding constraints and let
+XLA lower the collective). The LM head is vocab-sharded likewise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models.sharding import constrain
+
+Params = Dict[str, Any]
+
+BlockSpec = Tuple[str, str]  # (mixer, ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    head_dim: int = 128
+    blocks: Tuple[BlockSpec, ...] = ()  # len == n_layers; default all (attn, dense)
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, ...]] = None
+    sliding_window: Optional[int] = None
+    mlp_kind: str = "swiglu"
+    norm: str = "rms"
+    moe: Optional[MOE.MoEConfig] = None
+    mamba: Optional[M.Mamba2Config] = None
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    use_flash: bool = False  # Pallas path (TPU); jnp path lowers for dry-run
+    aux_loss_weight: float = 0.01
+    # scan over layer repetitions (compact HLO, fast compile) vs python-loop
+    # unroll. XLA's HloCostAnalysis counts a while-loop body ONCE, so the
+    # dry-run unrolls to get true FLOP/byte counts (launch/dryrun.py).
+    scan_layers: bool = True
+    # ---- perf knobs (EXPERIMENTS.md §Perf levers; defaults = paper-faithful
+    # baseline) ----
+    block_q: int = 256  # chunked-attention query block (KV re-read ∝ S/block_q)
+    # "full": recompute everything in bwd; "dots": save matmul outputs
+    # (less recompute, more residency)
+    remat_policy: str = "full"
+    # reshard the LM head so logits come from a WEIGHT all-gather instead of
+    # an ACTIVATION all-reduce (wins when B·S·V >> d·V, i.e. always at train)
+    gather_head: bool = False
+    # decode: shard the KV-cache SEQUENCE axis over the model axis
+    # (context-parallel decode) — kv-head counts (2/3/4/8) can't shard over
+    # 16, so without this the per-step attention re-gathers the cache
+    shard_cache_seq: bool = False
+    # pad q heads to a 16 multiple -> head-parallel attention (see AttnConfig)
+    pad_heads: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding-table rows, padded to a 256 multiple so the vocab axis
+        divides the 16-way model mesh (51865, 50280 don't). Logits beyond
+        ``vocab`` are masked in the loss / decode head."""
+        return -(-self.vocab // 256) * 256
+
+    def block_list(self) -> Tuple[BlockSpec, ...]:
+        return self.blocks if self.blocks else tuple(
+            [("attn", "dense")] * self.n_layers
+        )
+
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv=self.n_kv,
+            head_dim=self.head_dim,
+            qkv_bias=self.qkv_bias,
+            causal=True,
+            sliding_window=self.sliding_window,
+            rope_theta=self.rope_theta,
+            mrope_sections=self.mrope_sections,
+            chunk_unroll=not self.scan_layers,
+            block_q=self.block_q,
+            shard_cache_seq=self.shard_cache_seq,
+            pad_heads=self.pad_heads,
+        )
+
+    def mamba_cfg(self) -> M.Mamba2Config:
+        return dataclasses.replace(self.mamba, chunk_unroll=not self.scan_layers)
+
+    def period(self) -> int:
+        """Smallest repeating period of the block pattern."""
+        blocks = self.block_list()
+        n = len(blocks)
+        for p in range(1, n + 1):
+            if n % p == 0 and all(blocks[i] == blocks[i % p] for i in range(n)):
+                return p
+        return n
+
+
+# ---------------------------------------------------------------- parameters
+def _init_block(key: jax.Array, cfg: LMConfig, spec: BlockSpec, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": L.init_norm(cfg.norm, cfg.d_model, dtype)}
+    mixer, ffn = spec
+    if mixer == "attn":
+        p["attn"] = L.init_attn(k1, cfg.attn_cfg(), dtype)
+    else:
+        p["mamba"] = M.init_mamba2(k1, cfg.mamba, dtype)
+    if ffn != "none":
+        p["norm2"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+    if ffn == "dense":
+        p["mlp"] = L.init_mlp(k2, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dtype)
+    elif ffn == "moe":
+        p["moe"] = MOE.init_moe(k3, cfg.moe, dtype)
+    return p
+
+
+def init_lm_params(key: jax.Array, cfg: LMConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    blocks = cfg.block_list()
+    p = cfg.period()
+    R = len(blocks) // p
+    keys = jax.random.split(key, len(blocks) + 3)
+    # stack layer params per offset: leaf leading dim = R (scan axis)
+    stacked: List[Params] = []
+    for off in range(p):
+        per_rep = [
+            _init_block(keys[rep * p + off], cfg, blocks[off], dtype)
+            for rep in range(R)
+        ]
+        stacked.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_rep))
+    scale = 1.0 / np.sqrt(cfg.d_model)
+    params: Params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_padded, cfg.d_model)) * scale).astype(dtype),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "layers": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab_padded)) * scale
+        ).astype(dtype)
+    return params
+
+
+def abstract_params(cfg: LMConfig) -> Params:
+    return jax.eval_shape(lambda k: init_lm_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------- param specs
+def param_pspecs(cfg: LMConfig) -> Params:
+    """PartitionSpec pytree matching init_lm_params, under current rules."""
+    from repro.models.sharding import spec as S
+
+    def attn_specs(qkv_bias):
+        d = {
+            "wq": S("fsdp", "heads"), "wk": S("fsdp", "kv_heads"),
+            "wv": S("fsdp", "kv_heads"), "wo": S("heads", "fsdp"),
+        }
+        if qkv_bias:
+            d.update({"bq": S("heads"), "bk": S("kv_heads"), "bv": S("kv_heads")})
+        return d
+
+    def norm_specs(kind):
+        return {"scale": S(None)} if kind == "rms" else {"scale": S(None), "bias": S(None)}
+
+    def mlp_specs(kind):
+        if kind == "swiglu":
+            return {"wg": S("fsdp", "ffn"), "wu": S("fsdp", "ffn"), "wd": S("ffn", "fsdp")}
+        return {"wu": S("fsdp", "ffn"), "bu": S("ffn"), "wd": S("ffn", "fsdp"), "bd": S(None)}
+
+    def moe_specs(moecfg):
+        if moecfg.shard == "ep":  # experts over model, dims over fsdp
+            d = {
+                "router": S(None, None),
+                "wu": S("experts", "fsdp", None), "wd": S("experts", None, "fsdp"),
+            }
+            if moecfg.mlp_kind == "swiglu":
+                d["wg"] = S("experts", "fsdp", None)
+        else:  # tp: per-expert ffn dim over model
+            d = {
+                "router": S(None, None),
+                "wu": S(None, "fsdp", "ffn"), "wd": S(None, "ffn", "fsdp"),
+            }
+            if moecfg.mlp_kind == "swiglu":
+                d["wg"] = S(None, "fsdp", "ffn")
+        return d
+
+    def mamba_specs():
+        return {
+            "wz": S("fsdp", "mamba_heads"), "wx": S("fsdp", "mamba_heads"),
+            "wB": S("fsdp", None), "wC": S("fsdp", None), "wdt": S("fsdp", None),
+            "wo": S("mamba_heads", "fsdp"), "conv": S(None, None),
+            "A_log": S(None), "D": S(None), "dt_bias": S(None),
+            "norm_scale": S(None),
+        }
+
+    def block_specs(spec_: BlockSpec):
+        mixer, ffn = spec_
+        d: Params = {"norm1": norm_specs(cfg.norm)}
+        if mixer == "attn":
+            d["attn"] = attn_specs(cfg.qkv_bias)
+        else:
+            d["mamba"] = mamba_specs()
+        if ffn != "none":
+            d["norm2"] = norm_specs(cfg.norm)
+        if ffn == "dense":
+            d["mlp"] = mlp_specs(cfg.mlp_kind)
+        elif ffn == "moe":
+            d["moe"] = moe_specs(cfg.moe)
+        # stacked leading (scan) dim -> prepend None to every spec
+        return jax.tree_util.tree_map(
+            lambda s: jax.sharding.PartitionSpec(None, *s), d,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+
+    blocks = cfg.block_list()
+    p = cfg.period()
+    out: Params = {
+        "embed": S("vocab", "fsdp"),
+        "final_norm": norm_specs(cfg.norm),
+        "layers": [block_specs(blocks[off]) for off in range(p)],
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = S("fsdp", "vocab")
+    return out
+
+
+# ------------------------------------------------------------------- forward
+def embed_tokens(params: Params, cfg: LMConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    """PS pull: gather from the vocab-sharded table (paper §3.6)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if tokens.shape[1] > 1:  # decode steps keep S=1 replicated
+        return constrain(x, "batch", "seq", None)
+    return constrain(x, "batch", None, None)
+
+
+def _block_apply(
+    cfg: LMConfig,
+    spec_: BlockSpec,
+    bp: Params,
+    x: jnp.ndarray,
+    positions: Optional[jnp.ndarray],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mixer, ffn = spec_
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg.norm, bp["norm1"], x)
+    if mixer == "attn":
+        x = x + L.attn_forward(bp["attn"], cfg.attn_cfg(), h, positions, cfg.use_flash)
+    else:
+        x = x + M.mamba2_forward(bp["mamba"], cfg.mamba_cfg(), h)
+    if ffn == "dense":
+        x = x + L.mlp_forward(bp["mlp"], cfg.mlp_kind, L.apply_norm(cfg.norm, bp["norm2"], x))
+    elif ffn == "moe":
+        y, aux = MOE.moe_forward(bp["moe"], cfg.moe, L.apply_norm(cfg.norm, bp["norm2"], x))
+        x = x + y
+    # sequence-parallel residual stream: seq sharded over the model axis
+    return constrain(x, "batch", "seq", None), aux
+
+
+def forward(
+    params: Params,
+    cfg: LMConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    inputs_embeds: Optional[jnp.ndarray] = None,
+    positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward -> (logits (B,S,V), aux_loss)."""
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(params, cfg, tokens)
+    blocks = cfg.block_list()
+    p = cfg.period()
+
+    def rep_body(x, rep_params):
+        aux_sum = jnp.zeros((), jnp.float32)
+        for off in range(p):
+            x, aux = _block_apply(cfg, blocks[off], rep_params[off], x, positions)
+            aux_sum = aux_sum + aux
+        return x, aux_sum
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(rep_body, policy=policy)
+    else:
+        body = rep_body
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(lambda c, xs: body(c, xs), x, params["layers"])
+        aux_total = auxs.sum()
+    else:
+        R = len(blocks) // p
+        aux_total = jnp.zeros((), jnp.float32)
+        for rep in range(R):
+            rep_params = jax.tree_util.tree_map(lambda l: l[rep], params["layers"])
+            x, aux = body(x, rep_params)
+            aux_total = aux_total + aux
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.gather_head:
+        # pull the head to (d replicated, vocab on model) BEFORE the matmul:
+        # one weight all-gather (d·V/16 bytes) replaces the logits
+        # all-reduce over the fsdp-sharded contraction (B·S·V/16 bytes).
+        head = constrain(head, None, "vocab")
+    logits = x @ head
+    logits = _mask_padded_vocab(cfg, logits)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux_total
+
+
+def _mask_padded_vocab(cfg: LMConfig, logits: jnp.ndarray) -> jnp.ndarray:
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(v_iota < cfg.vocab, logits, -1e30)
+
+
+def gold_logit(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Label-logit extraction that stays sharded on the vocab axis.
+
+    take_along_axis would force an all-gather of the vocab-sharded logits
+    (~16x the logits bytes per device); the iota-compare-select-reduce form
+    keeps every operand sharded and fuses to a masked row reduction.
+    """
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    hit = v_iota == labels[..., None]
+    return jnp.where(hit, logits, 0.0).sum(axis=-1)
+
+
+def lm_loss(
+    params: Params,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    positions: Optional[jnp.ndarray] = None,
+    inputs_embeds: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    logits, aux = forward(params, cfg, tokens, inputs_embeds, positions)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = gold_logit(logits, labels)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + cfg.aux_loss_weight * aux
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(cfg: LMConfig, batch: int, cache_len: int) -> Params:
+    """Per-offset stacked caches (scan layout). cache_len = full context for
+    dense archs, sliding window for SWA archs (ring)."""
+    dtype = jnp.dtype(cfg.dtype)
+    blocks = cfg.block_list()
+    p = cfg.period()
+    R = len(blocks) // p
+    caches: List[Params] = []
+    for off in range(p):
+        mixer, _ = blocks[off]
+        if mixer == "attn":
+            s_max = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+            one = L.init_kv_cache(
+                L.KVCacheSpec(batch, s_max, cfg.n_kv, cfg.head_dim,
+                              ring=cfg.sliding_window is not None), dtype
+            )
+        else:
+            one = M.init_mamba_cache(cfg.mamba, batch, dtype)
+        caches.append(
+            jax.tree_util.tree_map(lambda a: jnp.broadcast_to(a, (R,) + a.shape), one)
+        )
+    return {"layers": caches, "t": jnp.zeros((), jnp.int32)}
+
+
+def cache_pspecs(cfg: LMConfig) -> Params:
+    from repro.models.sharding import spec as S
+
+    blocks = cfg.block_list()
+    p = cfg.period()
+    out: List[Params] = []
+    for off in range(p):
+        mixer, _ = blocks[off]
+        if mixer == "attn":
+            # flattened (R, B, S, n_kv*head_dim) layout — see KVCacheSpec
+            seq_ax = "cache_seq" if cfg.shard_cache_seq else None
+            kv_ax = None if cfg.shard_cache_seq else "kv_heads"
+            out.append({
+                "k": S(None, "batch", seq_ax, kv_ax),
+                "v": S(None, "batch", seq_ax, kv_ax),
+            })
+        else:
+            out.append({
+                "ssm": S(None, "batch", "mamba_heads", None, None),
+                # conv channels mix x/B/C — keep replicated on the channel dim
+                "conv": S(None, "batch", None, None),
+            })
+    return {"layers": out, "t": jax.sharding.PartitionSpec()}
+
+
+def decode_step(
+    params: Params,
+    cfg: LMConfig,
+    cache: Params,
+    token: jnp.ndarray,  # (B, 1) int32
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token serve step -> (logits (B, V), new cache)."""
+    x = embed_tokens(params, cfg, token)
+    blocks = cfg.block_list()
+    p = cfg.period()
+    t = cache["t"]
+
+    def rep_body(x, xs):
+        rep_params, rep_cache = xs
+        new_cache = []
+        for off in range(p):
+            mixer, ffn = blocks[off]
+            bp = rep_params[off]
+            c = rep_cache[off]
+            h = L.apply_norm(cfg.norm, bp["norm1"], x)
+            if mixer == "attn":
+                y, c = L.attn_decode_step(bp["attn"], cfg.attn_cfg(), c, h, t)
+            else:
+                y, c = M.mamba2_decode_step(bp["mamba"], cfg.mamba, c, h)
+            x = x + y
+            if ffn == "dense":
+                x = x + L.mlp_forward(bp["mlp"], cfg.mlp_kind,
+                                      L.apply_norm(cfg.norm, bp["norm2"], x))
+            elif ffn == "moe":
+                ymoe, _ = MOE.moe_forward(bp["moe"], cfg.moe,
+                                          L.apply_norm(cfg.norm, bp["norm2"], x))
+                x = x + ymoe
+            new_cache.append(c)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_layer_caches = jax.lax.scan(
+            rep_body, x, (params["layers"], cache["layers"])
+        )
+    else:
+        blocks_n = len(blocks)
+        R = blocks_n // p
+        outs = []
+        for rep in range(R):
+            rp = jax.tree_util.tree_map(lambda l: l[rep], params["layers"])
+            rc = jax.tree_util.tree_map(lambda l: l[rep], cache["layers"])
+            x, nc = rep_body(x, (rp, rc))
+            outs.append(nc)
+        new_layer_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *outs
+        )
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if cfg.gather_head:
+        head = constrain(head, None, "vocab")
+    logits = _mask_padded_vocab(cfg, (x @ head))[:, 0, :]
+    logits = constrain(logits, "batch", "vocab")
+    return logits, {"layers": new_layer_caches, "t": t + 1}

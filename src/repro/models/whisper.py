@@ -1,0 +1,290 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the brief, the mel-spectrogram + conv frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, n_frames, d_model). We implement
+the transformer that consumes them: a bidirectional encoder with sinusoidal
+positions and a causal decoder with learned positions and cross-attention.
+
+Decode shapes lower ``decode_step``: one new token against a self-attn KV
+cache plus the precomputed cross-attention K/V of the encoded audio.
+Whisper's trained context is 448 tokens; the 32k-decode dry-run exercises
+sharding/lowering beyond that, as noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class WhisperConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int  # encoder AND decoder layer count (tiny: 4/4)
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    n_audio_frames: int = 1500  # post-conv frames (30 s)
+    max_target_positions: int = 448
+
+    @property
+    def vocab_padded(self) -> int:
+        return -(-self.vocab // 256) * 256
+    norm: str = "ln"
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True  # see transformer.LMConfig.scan_layers
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_cfg(self, causal: bool) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.head_dim, qkv_bias=True, causal=causal,
+            use_rope=False, chunk_unroll=not self.scan_layers,
+        )
+
+
+def _scan_or_unroll(cfg: "WhisperConfig", body, x, xs):
+    """lax.scan (compact HLO) or python unroll (true cost analysis)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree_util.tree_map(lambda l: l[i], xs)
+        x, y = body(x, xi)
+        ys.append(y)
+    if any(y is None for y in ys):
+        return x, None
+    return x, jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+
+
+def _sinusoids(length: int, channels: int) -> np.ndarray:
+    t = np.arange(length)[:, None]
+    inv = np.exp(-np.log(10000.0) * np.arange(channels // 2) / (channels // 2 - 1))
+    ang = t * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def init_whisper_params(key: jax.Array, cfg: WhisperConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    n = cfg.n_layers
+    keys = jax.random.split(key, 6 * n + 4)
+    ki = iter(range(len(keys)))
+
+    def enc_layer():
+        return {
+            "norm1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": L.init_attn(keys[next(ki)], cfg.attn_cfg(False), dtype),
+            "norm2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.init_mlp(keys[next(ki)], "gelu", cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_layer():
+        return {
+            "norm1": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "self_attn": L.init_attn(keys[next(ki)], cfg.attn_cfg(True), dtype),
+            "norm_x": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "cross_attn": L.init_cross_attn(keys[next(ki)], cfg.attn_cfg(False), dtype),
+            "norm2": L.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.init_mlp(keys[next(ki)], "gelu", cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    enc = [enc_layer() for _ in range(n)]
+    dec = [dec_layer() for _ in range(n)]
+    stack = lambda ls: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ls)
+    scale = 1.0 / np.sqrt(cfg.d_model)
+    return {
+        "enc_pos": jnp.asarray(_sinusoids(cfg.n_audio_frames, cfg.d_model), dtype),
+        "dec_pos": (jax.random.normal(keys[next(ki)],
+                    (cfg.max_target_positions, cfg.d_model)) * 0.01).astype(dtype),
+        "embed": (jax.random.normal(keys[next(ki)], (cfg.vocab_padded, cfg.d_model)) * scale).astype(dtype),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+        "dec_norm": L.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+def abstract_params(cfg: WhisperConfig) -> Params:
+    return jax.eval_shape(lambda k: init_whisper_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def param_pspecs(cfg: WhisperConfig) -> Params:
+    from repro.models.sharding import spec as S
+
+    def attn_s():
+        return {
+            "wq": S(None, "fsdp", "heads"), "wk": S(None, "fsdp", "kv_heads"),
+            "wv": S(None, "fsdp", "kv_heads"), "wo": S(None, "heads", "fsdp"),
+            "bq": S(None, "heads"), "bk": S(None, "kv_heads"), "bv": S(None, "kv_heads"),
+        }
+
+    def norm_s():
+        return {"scale": S(None, None), "bias": S(None, None)}
+
+    def mlp_s():
+        return {"wu": S(None, "fsdp", "ffn"), "bu": S(None, "ffn"),
+                "wd": S(None, "ffn", "fsdp"), "bd": S(None, None)}
+
+    enc = {"norm1": norm_s(), "attn": attn_s(), "norm2": norm_s(), "mlp": mlp_s()}
+    dec = {
+        "norm1": norm_s(), "self_attn": attn_s(), "norm_x": norm_s(),
+        "cross_attn": attn_s(), "norm2": norm_s(), "mlp": mlp_s(),
+    }
+    return {
+        "enc_pos": S(None, None),
+        "dec_pos": S(None, None),
+        "embed": S("vocab", "fsdp"),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": {"scale": S(None), "bias": S(None)},
+        "dec_norm": {"scale": S(None), "bias": S(None)},
+    }
+
+
+# ------------------------------------------------------------------- encode
+def encode(params: Params, cfg: WhisperConfig, audio_embeds: jnp.ndarray) -> jnp.ndarray:
+    """audio_embeds: (B, n_frames, d) stub frontend output -> encoder states."""
+    x = audio_embeds + params["enc_pos"][None, : audio_embeds.shape[1]]
+    x = constrain(x, "batch", None, None)
+    acfg = cfg.attn_cfg(False)
+
+    def body(x, lp):
+        h = L.apply_norm(cfg.norm, lp["norm1"], x)
+        x = x + L.attn_forward(lp["attn"], acfg, h)
+        x = x + L.mlp_forward(lp["mlp"], "gelu", L.apply_norm(cfg.norm, lp["norm2"], x))
+        return constrain(x, "batch", None, None), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = _scan_or_unroll(cfg, body, x, params["enc_layers"])
+    return L.apply_norm(cfg.norm, params["enc_norm"], x)
+
+
+def decode_train(
+    params: Params, cfg: WhisperConfig, enc: jnp.ndarray, tokens: jnp.ndarray
+) -> jnp.ndarray:
+    B, S = tokens.shape
+    pos = jnp.minimum(jnp.arange(S), cfg.max_target_positions - 1)
+    x = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][pos][None]
+    x = constrain(x, "batch", None, None)
+    acfg_self = cfg.attn_cfg(True)
+    acfg_x = cfg.attn_cfg(False)
+
+    def body(x, lp):
+        h = L.apply_norm(cfg.norm, lp["norm1"], x)
+        x = x + L.attn_forward(lp["self_attn"], acfg_self, h)
+        kv = L.encode_cross_kv(lp["cross_attn"], acfg_x, enc)
+        h = L.apply_norm(cfg.norm, lp["norm_x"], x)
+        x = x + L.cross_attn_forward(lp["cross_attn"], acfg_x, h, kv)
+        x = x + L.mlp_forward(lp["mlp"], "gelu", L.apply_norm(cfg.norm, lp["norm2"], x))
+        return constrain(x, "batch", None, None), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = _scan_or_unroll(cfg, body, x, params["dec_layers"])
+    x = L.apply_norm(cfg.norm, params["dec_norm"], x)
+    logits = x @ params["embed"].T  # tied head
+    if cfg.vocab_padded != cfg.vocab:
+        v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(v_iota < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def loss(
+    params: Params, cfg: WhisperConfig,
+    audio_embeds: jnp.ndarray, tokens: jnp.ndarray, labels: jnp.ndarray,
+) -> jnp.ndarray:
+    enc = encode(params, cfg, audio_embeds)
+    logits = decode_train(params, cfg, enc, tokens).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "vocab")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    from repro.models.transformer import gold_logit
+    gold = gold_logit(logits, labels)
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# -------------------------------------------------------------------- decode
+def init_cache(
+    params: Params, cfg: WhisperConfig, audio_embeds: jnp.ndarray, cache_len: int
+) -> Params:
+    """Prefill: encode audio once, precompute per-layer cross K/V, allocate
+    the self-attn cache."""
+    enc = encode(params, cfg, audio_embeds)
+    B = audio_embeds.shape[0]
+    dtype = jnp.dtype(cfg.dtype)
+    acfg_x = cfg.attn_cfg(False)
+
+    # per-layer cross K/V via vmap over the stacked decoder layer params
+    k, v = jax.vmap(
+        lambda lp: L.encode_cross_kv(lp["cross_attn"], acfg_x, enc)
+    )(params["dec_layers"])
+    self_cache = L.init_kv_cache(
+        L.KVCacheSpec(B, cache_len, cfg.n_kv, cfg.head_dim, ring=False), dtype
+    )
+    self_cache = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), self_cache
+    )
+    return {"self": self_cache, "cross_k": k, "cross_v": v, "t": jnp.zeros((), jnp.int32)}
+
+
+def cache_pspecs(cfg: WhisperConfig) -> Params:
+    from repro.models.sharding import spec as S
+
+    return {
+        # self cache is flattened (L, B, S, n_kv*head_dim)
+        "self": {"k": S(None, "batch", None, "kv_heads"),
+                 "v": S(None, "batch", None, "kv_heads")},
+        # cross K/V keep head layout (small: n_frames per layer); heads
+        # replicated — 6 kv heads don't divide the 16-way model axis
+        "cross_k": S(None, "batch", None, None, None),
+        "cross_v": S(None, "batch", None, None, None),
+        "t": jax.sharding.PartitionSpec(),
+    }
+
+
+def decode_step(
+    params: Params, cfg: WhisperConfig, cache: Params, token: jnp.ndarray
+) -> Tuple[jnp.ndarray, Params]:
+    B = token.shape[0]
+    t = cache["t"]
+    pos = jnp.minimum(t, cfg.max_target_positions - 1)
+    x = jnp.take(params["embed"], token, axis=0) + params["dec_pos"][pos][None, None]
+    acfg_self = cfg.attn_cfg(True)
+    acfg_x = cfg.attn_cfg(False)
+
+    def body(x, xs):
+        lp, sc, ck, cv = xs
+        h = L.apply_norm(cfg.norm, lp["norm1"], x)
+        y, sc = L.attn_decode_step(lp["self_attn"], acfg_self, sc, h, t)
+        x = x + y
+        h = L.apply_norm(cfg.norm, lp["norm_x"], x)
+        x = x + L.cross_attn_forward(lp["cross_attn"], acfg_x, h, (ck, cv))
+        x = x + L.mlp_forward(lp["mlp"], "gelu", L.apply_norm(cfg.norm, lp["norm2"], x))
+        return x, sc
+
+    x, new_self = _scan_or_unroll(
+        cfg, body, x,
+        (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = L.apply_norm(cfg.norm, params["dec_norm"], x)
+    logits = (x @ params["embed"].T)[:, 0, :]
+    if cfg.vocab_padded != cfg.vocab:
+        v_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(v_iota < cfg.vocab, logits, -1e30)
+    logits = constrain(logits, "batch", "vocab")
+    return logits, {"self": new_self, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"], "t": t + 1}

@@ -1,0 +1,3 @@
+from repro.sampling.ego import EgoConfig, EgoBatch, sample_ego_batch, PAD
+from repro.sampling.pairs import PairConfig, window_pairs, pairs_to_nodes, sample_random_negatives
+from repro.sampling.pipeline import PipelineConfig, SamplePipeline, TrainBatch

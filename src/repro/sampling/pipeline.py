@@ -1,0 +1,153 @@
+"""Training-sample pipeline: walk -> {pair, ego} in either order (§3.6).
+
+Graph4Rec's "Walk, Sample, Pair: Order Matters" optimization: generating
+pairs first and then sampling an ego graph per pair element costs O(wL) ego
+samplings per path (repeated nodes re-sampled); sampling ego graphs per path
+*position* first and letting pairs index into them costs O(L). The trade-off
+is sample diversity (repeated nodes share one ego sample within a batch).
+Both orders are implemented; benchmarks/bench_order.py measures the speed /
+recall trade-off (paper Table 7), with the engine's request counters
+providing the communication-cost signal.
+
+The pipeline emits fixed-size batches (shape-static for jit): exactly
+``batch_pairs`` pairs per batch, trimming the tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.sampling.ego import EgoBatch, EgoConfig, sample_ego_batch
+from repro.sampling.pairs import (
+    PairConfig,
+    pairs_to_nodes,
+    sample_random_negatives,
+    window_pairs,
+)
+from repro.walk.metapath import MetapathWalker, WalkConfig
+
+PAD = -1
+
+
+@dataclasses.dataclass
+class TrainBatch:
+    """One contrastive training batch of ego-graph pairs (or bare id pairs)."""
+
+    src_ids: np.ndarray  # (P,)
+    dst_ids: np.ndarray  # (P,)
+    neg_ids: Optional[np.ndarray]  # (P, M) random-negative mode, else None
+    src_ego: Optional[EgoBatch]  # None for walk-only models
+    dst_ego: Optional[EgoBatch]
+    neg_ego: Optional[EgoBatch]  # (P*M,) flattened, random-negative mode w/ GNN
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    walk: WalkConfig
+    pair: PairConfig
+    ego: Optional[EgoConfig] = None  # None -> walk-based model (skip ego stage)
+    order: str = "walk_ego_pair"  # "walk_ego_pair" (fast) | "walk_pair_ego" (diverse)
+    batch_pairs: int = 512
+    walks_per_round: int = 64
+
+
+class SamplePipeline:
+    """Streams TrainBatches from a graph engine. CPU-side, feeds the device."""
+
+    def __init__(self, engine, config: PipelineConfig, seed: int = 0):
+        self.engine = engine
+        self.config = config
+        self.walker = MetapathWalker(engine, config.walk)
+        self.rng = np.random.default_rng(seed)
+        graph = engine.graph if hasattr(engine, "graph") else engine
+        self._node_range = (0, graph.num_nodes)
+        # stats mirrored from ego sampling for RQ5 accounting
+        self.ego_sampling_ops = 0
+
+    # ------------------------------------------------------------------ round
+    def _round(self) -> Iterator[Tuple[np.ndarray, np.ndarray, Optional[EgoBatch], Optional[EgoBatch]]]:
+        cfg = self.config
+        paths = self.walker.generate(self.rng, cfg.walks_per_round)
+        pairs = window_pairs(paths, cfg.pair.win_size)
+        if len(pairs) == 0:
+            return
+        self.rng.shuffle(pairs)
+        if cfg.ego is None:
+            src, dst = pairs_to_nodes(paths, pairs)
+            yield src, dst, None, None
+            return
+
+        if cfg.order == "walk_ego_pair":
+            # O(L): one ego sample per (path, position); pairs reference them.
+            B, L = paths.shape
+            flat_nodes = paths.reshape(-1)
+            valid = flat_nodes != PAD
+            egos_flat = sample_ego_batch(
+                self.rng, self.engine, np.where(valid, flat_nodes, 0), cfg.ego
+            )
+            self.ego_sampling_ops += int(valid.sum())
+            src_idx = pairs[:, 0] * L + pairs[:, 1]
+            dst_idx = pairs[:, 0] * L + pairs[:, 2]
+            src, dst = pairs_to_nodes(paths, pairs)
+            yield src, dst, egos_flat.take(src_idx), egos_flat.take(dst_idx)
+        elif cfg.order == "walk_pair_ego":
+            # O(wL): fresh ego sample per pair endpoint (more diversity).
+            src, dst = pairs_to_nodes(paths, pairs)
+            src_ego = sample_ego_batch(self.rng, self.engine, src, cfg.ego)
+            dst_ego = sample_ego_batch(self.rng, self.engine, dst, cfg.ego)
+            self.ego_sampling_ops += len(src) + len(dst)
+            yield src, dst, src_ego, dst_ego
+        else:
+            raise ValueError(f"unknown order {self.config.order!r}")
+
+    # ---------------------------------------------------------------- batches
+    def batches(self, num_batches: int) -> Iterator[TrainBatch]:
+        cfg = self.config
+        P = cfg.batch_pairs
+        buf_src: list = []
+        buf_dst: list = []
+        buf_se: list = []
+        buf_de: list = []
+        emitted = 0
+        while emitted < num_batches:
+            for src, dst, se, de in self._round():
+                # chunk into fixed-size batches
+                n = len(src)
+                for lo in range(0, n - P + 1, P):
+                    idx = slice(lo, lo + P)
+                    sl = np.arange(lo, lo + P)
+                    batch = self._finalize(
+                        src[idx], dst[idx],
+                        se.take(sl) if se is not None else None,
+                        de.take(sl) if de is not None else None,
+                    )
+                    yield batch
+                    emitted += 1
+                    if emitted >= num_batches:
+                        return
+
+    def _finalize(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        src_ego: Optional[EgoBatch],
+        dst_ego: Optional[EgoBatch],
+    ) -> TrainBatch:
+        cfg = self.config
+        neg_ids = None
+        neg_ego = None
+        if cfg.pair.neg_mode == "random":
+            neg_ids = sample_random_negatives(
+                self.rng, len(src), cfg.pair.num_negatives, self._node_range
+            )
+            if cfg.ego is not None:
+                neg_ego = sample_ego_batch(
+                    self.rng, self.engine, neg_ids.reshape(-1), cfg.ego
+                )
+                self.ego_sampling_ops += neg_ids.size
+        return TrainBatch(
+            src_ids=src, dst_ids=dst, neg_ids=neg_ids,
+            src_ego=src_ego, dst_ego=dst_ego, neg_ego=neg_ego,
+        )

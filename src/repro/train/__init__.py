@@ -1,0 +1,5 @@
+from repro.train.optimizer import (
+    Optimizer, sgd, adagrad, adam, adamw, masked, apply_updates, clip_by_global_norm,
+)
+from repro.train.trainer import TrainerConfig, TrainResult, Graph4RecTrainer
+from repro.train import checkpoint

@@ -1,0 +1,49 @@
+"""Flat-npz pytree checkpointing (offline container: no orbax).
+
+Pytrees of jnp/np arrays are flattened to ``key.path`` -> array and stored in
+a single .npz; restore rebuilds the dict pytree. Sufficient for warm-start
+hand-off (metapath2vec -> GNN) and trainer resumption.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}|"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}|"))
+    else:
+        out[prefix.rstrip("|")] = np.asarray(tree)
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def load_dict(path: str) -> Dict[str, Any]:
+    """Restore a (possibly nested-by-'|') dict pytree."""
+    flat = load_flat(path)
+    out: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("|")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = val
+    return out

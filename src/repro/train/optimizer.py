@@ -1,0 +1,142 @@
+"""Minimal pure-JAX optimizers (no optax offline): sgd / adagrad / adam / adamw.
+
+API mirrors optax: ``opt = adam(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply_updates``.
+Works on arbitrary pytrees. A ``masked`` combinator applies different
+optimizers to sparse (embedding) vs dense parameters — the PS-style split the
+paper uses (sparse rows on the server via adagrad, dense weights via adam).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+        new_m = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree_util.tree_map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float, eps: float = 1e-8, init_accum: float = 0.1) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.full_like(p, init_accum), params
+        )
+
+    def update(grads, state, params=None):
+        new_acc = jax.tree_util.tree_map(lambda a, g: a + g * g, state, grads)
+        upd = jax.tree_util.tree_map(
+            lambda g, a: -lr * g / (jnp.sqrt(a) + eps), grads, new_acc
+        )
+        return upd, new_acc
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam; with weight_decay>0 this is AdamW (decoupled decay)."""
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m, v, p):
+            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - lr * weight_decay * p
+            return upd
+
+        if params is None:
+            params = jax.tree_util.tree_map(lambda m: None, mu)
+        updates = jax.tree_util.tree_map(u, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def masked(
+    opt_a: Optimizer, opt_b: Optimizer, select_a: Callable[[str], bool]
+) -> Optimizer:
+    """Dict-pytree combinator: keys where select_a(key) use opt_a, else opt_b.
+
+    Used for the sparse/dense split: adagrad on ``emb/*`` tables (the PS-side
+    update), adam on dense GNN weights.
+    """
+
+    def _split(tree: Dict[str, Any]):
+        a = {k: v for k, v in tree.items() if select_a(k)}
+        b = {k: v for k, v in tree.items() if not select_a(k)}
+        return a, b
+
+    def init(params):
+        a, b = _split(params)
+        return (opt_a.init(a), opt_b.init(b))
+
+    def update(grads, state, params=None):
+        ga, gb = _split(grads)
+        pa, pb = _split(params) if params is not None else (None, None)
+        ua, sa = opt_a.update(ga, state[0], pa)
+        ub, sb = opt_b.update(gb, state[1], pb)
+        return {**ua, **ub}, (sa, sb)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(updates, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(updates)
+    norm = jnp.sqrt(sum(jnp.sum(l * l) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda u: u * scale, updates)

@@ -1,0 +1,2 @@
+from repro.utils.pytree import tree_size_bytes, tree_num_params
+from repro.utils.log import get_logger

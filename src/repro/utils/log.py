@@ -1,0 +1,22 @@
+"""Logging shim: consistent format, env-controlled level."""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_CONFIGURED = False
+
+
+def get_logger(name: str) -> logging.Logger:
+    global _CONFIGURED
+    if not _CONFIGURED:
+        level = os.environ.get("REPRO_LOG_LEVEL", "INFO").upper()
+        logging.basicConfig(
+            stream=sys.stderr,
+            level=getattr(logging, level, logging.INFO),
+            format="%(asctime)s %(levelname)s %(name)s | %(message)s",
+            datefmt="%H:%M:%S",
+        )
+        _CONFIGURED = True
+    return logging.getLogger(name)

@@ -1,0 +1,20 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_num_params(tree) -> int:
+    """Total number of array elements in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) if hasattr(l, "shape") else 1 for l in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays / ShapeDtypeStructs."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+    return total

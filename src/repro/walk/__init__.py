@@ -1,0 +1,1 @@
+from repro.walk.metapath import WalkConfig, MetapathWalker, parse_metapath, jax_walk

@@ -1,0 +1,123 @@
+"""Heterogeneous graph structure + distributed engine tests."""
+import numpy as np
+import pytest
+
+from repro.graph import (
+    CSR, DistributedGraphEngine, HeteroGraph, Relation, TOY, generate,
+)
+
+
+def toy_graph():
+    return HeteroGraph.from_edges(
+        node_counts={"u": 3, "i": 4},
+        edges={"u2click2i": (np.array([0, 0, 1, 2]), np.array([0, 1, 2, 3]))},
+        symmetry=True,
+    )
+
+
+class TestRelation:
+    def test_parse_triple(self):
+        r = Relation.parse("u2click2i")
+        assert (r.src_type, r.etype, r.dst_type) == ("u", "click", "i")
+
+    def test_parse_homogeneous(self):
+        r = Relation.parse("u2u")
+        assert (r.src_type, r.dst_type) == ("u", "u")
+
+    def test_reverse_name(self):
+        assert Relation.parse("u2buy2i").reverse_name == "i2buy2u"
+
+    def test_bad_relation(self):
+        with pytest.raises(ValueError):
+            Relation.parse("u2a2b2c")
+
+
+class TestHeteroGraph:
+    def test_symmetry_adds_reverse(self):
+        g = toy_graph()
+        assert "i2click2u" in g.relations
+        # reverse edges mirror forward ones
+        fwd = g.relations["u2click2i"]
+        rev = g.relations["i2click2u"]
+        assert fwd.num_edges == rev.num_edges == 4
+
+    def test_global_id_ranges(self):
+        g = toy_graph()
+        assert g.node_type_ranges["u"] == (0, 3)
+        assert g.node_type_ranges["i"] == (3, 4)
+        assert g.num_nodes == 7
+        assert g.node_type_of(0) == "u"
+        assert g.node_type_of(4) == "i"
+
+    def test_adjacency(self):
+        g = toy_graph()
+        # user 0 clicked items 0,1 -> global 3,4
+        assert sorted(g.relations["u2click2i"].neighbors(0).tolist()) == [3, 4]
+        # item 2 (global 5) was clicked by user 1
+        assert g.relations["i2click2u"].neighbors(5).tolist() == [1]
+
+    def test_sample_neighbors_validity(self):
+        g = toy_graph()
+        rng = np.random.default_rng(0)
+        nodes = np.array([0, 1, 2, 6])
+        out = g.sample_neighbors(rng, nodes, "u2click2i", 5)
+        assert out.shape == (4, 5)
+        for row, node in zip(out, nodes):
+            nbrs = set(g.relations["u2click2i"].neighbors(node).tolist())
+            for x in row:
+                assert (x == -1 and not nbrs) or x in nbrs
+
+    def test_sample_no_neighbors_pads(self):
+        g = toy_graph()
+        rng = np.random.default_rng(0)
+        out = g.sample_neighbors(rng, np.array([3]), "u2click2i", 3)
+        assert (out == -1).all()  # items have no u2click2i out-edges
+
+    def test_padded_adjacency(self):
+        g = toy_graph()
+        adj, deg = g.padded_adjacency("u2click2i", max_degree=3)
+        assert adj.shape == (7, 3)
+        assert deg[0] == 2 and deg[3] == 0
+        assert set(adj[0][: deg[0]].tolist()) == {3, 4}
+
+
+class TestGenerator:
+    def test_toy_dataset(self):
+        ds = generate(TOY, seed=0)
+        g = ds.graph
+        assert g.num_nodes == TOY.num_users + TOY.num_items
+        assert "u2click2i" in g.relations and "i2click2u" in g.relations
+        assert len(ds.val_pairs) > 0 and len(ds.test_pairs) > 0
+        # all eval pairs in range
+        assert ds.val_pairs[:, 0].max() < TOY.num_users
+        assert ds.val_pairs[:, 1].max() < TOY.num_items
+        # side info slots exist and are cluster-correlated
+        assert "slot0" in g.slots
+
+    def test_deterministic(self):
+        a = generate(TOY, seed=3)
+        b = generate(TOY, seed=3)
+        assert a.graph.num_edges == b.graph.num_edges
+        np.testing.assert_array_equal(a.val_pairs, b.val_pairs)
+
+
+class TestDistributedEngine:
+    def test_matches_graph_adjacency(self):
+        ds = generate(TOY, seed=1)
+        eng = DistributedGraphEngine(ds.graph, num_partitions=4)
+        rng = np.random.default_rng(0)
+        nodes = np.arange(0, 60, 7)
+        out = eng.sample_neighbors(rng, nodes, "u2click2i", 4)
+        for row, node in zip(out, nodes):
+            nbrs = set(ds.graph.relations["u2click2i"].neighbors(node).tolist())
+            for x in row:
+                assert (x == -1 and not nbrs) or x in nbrs
+
+    def test_stats_count_cross_partition(self):
+        ds = generate(TOY, seed=1)
+        eng = DistributedGraphEngine(ds.graph, num_partitions=4, client_part=0)
+        rng = np.random.default_rng(0)
+        eng.sample_neighbors(rng, np.arange(40), "u2click2i", 2)
+        assert eng.stats.neighbor_requests == 40
+        # ids 1,2,3 mod 4 != 0 -> 30 of 40 are remote
+        assert eng.stats.cross_partition_requests == 30

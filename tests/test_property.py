@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.hetero_graph import HeteroGraph, _csr_from_pairs
+from repro.kernels import ops, ref
+from repro.sampling.pairs import window_pairs
+from repro.core.recall import evaluate_recall
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def edge_lists(draw):
+    n_u = draw(st.integers(2, 12))
+    n_i = draw(st.integers(2, 12))
+    n_e = draw(st.integers(1, 40))
+    src = draw(st.lists(st.integers(0, n_u - 1), min_size=n_e, max_size=n_e))
+    dst = draw(st.lists(st.integers(0, n_i - 1), min_size=n_e, max_size=n_e))
+    return n_u, n_i, np.array(src), np.array(dst)
+
+
+class TestGraphInvariants:
+    @given(edge_lists())
+    @settings(**SETTINGS)
+    def test_csr_roundtrip(self, data):
+        n_u, n_i, src, dst = data
+        g = HeteroGraph.from_edges(
+            {"u": n_u, "i": n_i}, {"u2click2i": (src, dst)}, symmetry=True
+        )
+        csr = g.relations["u2click2i"]
+        # every edge present exactly once
+        rebuilt = []
+        for v in range(g.num_nodes):
+            for x in csr.neighbors(v):
+                rebuilt.append((v, int(x)))
+        expect = sorted(zip(src.tolist(), (dst + n_u).tolist()))
+        assert sorted(rebuilt) == expect
+
+    @given(edge_lists())
+    @settings(**SETTINGS)
+    def test_symmetry_is_transpose(self, data):
+        n_u, n_i, src, dst = data
+        g = HeteroGraph.from_edges(
+            {"u": n_u, "i": n_i}, {"u2click2i": (src, dst)}, symmetry=True
+        )
+        fwd = g.relations["u2click2i"]
+        rev = g.relations["i2click2u"]
+        fwd_edges = sorted(
+            (v, int(x)) for v in range(g.num_nodes) for x in fwd.neighbors(v)
+        )
+        rev_edges = sorted(
+            (int(x), v) for v in range(g.num_nodes) for x in rev.neighbors(v)
+        )
+        assert fwd_edges == rev_edges
+
+    @given(edge_lists(), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+    @settings(**SETTINGS)
+    def test_sampled_neighbors_are_neighbors(self, data, k, seed):
+        n_u, n_i, src, dst = data
+        g = HeteroGraph.from_edges(
+            {"u": n_u, "i": n_i}, {"u2click2i": (src, dst)}, symmetry=True
+        )
+        rng = np.random.default_rng(seed)
+        nodes = np.arange(g.num_nodes)
+        out = g.sample_neighbors(rng, nodes, "u2click2i", k)
+        for row, v in zip(out, nodes):
+            nbrs = set(g.relations["u2click2i"].neighbors(v).tolist())
+            assert all((x == -1 and not nbrs) or x in nbrs for x in row)
+
+
+class TestPairInvariants:
+    @given(
+        st.integers(2, 8),  # L
+        st.integers(1, 4),  # win
+        st.integers(1, 5),  # B
+        st.integers(0, 2 ** 31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_window_pairs_within_window(self, L, win, B, seed):
+        rng = np.random.default_rng(seed)
+        paths = rng.integers(0, 50, size=(B, L))
+        # randomly truncate with PAD suffixes
+        for b in range(B):
+            cut = rng.integers(1, L + 1)
+            paths[b, cut:] = -1
+        pairs = window_pairs(paths, win)
+        for r, sc, dc in pairs:
+            assert sc != dc
+            assert abs(sc - dc) <= win
+            assert paths[r, sc] != -1 and paths[r, dc] != -1
+
+
+class TestKernelProperties:
+    @given(
+        st.integers(1, 40),  # N
+        st.integers(1, 9),  # F
+        st.integers(1, 200),  # D
+        st.sampled_from(["mean", "sum", "max"]),
+        st.integers(0, 2 ** 31 - 1),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_seg_aggr_matches_oracle(self, N, F, D, mode, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed % (2 ** 31)))
+        x = jax.random.normal(k1, (N, F, D))
+        mask = jax.random.bernoulli(k2, 0.5, (N, F))
+        got = ops.seg_aggr(x, mask, mode=mode)
+        want = ref.seg_aggr_ref(x, mask, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+    @given(st.integers(2, 80), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_inbatch_loss_matches_oracle(self, P, d, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed % (2 ** 31)))
+        hs = jax.random.normal(k1, (P, d))
+        hd = jax.random.normal(k2, (P, d))
+        got = float(ops.inbatch_loss(hs, hd, 1.0))
+        want = float(ref.inbatch_loss_ref(hs, hd, 1.0))
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_inbatch_loss_lower_bound(self, seed):
+        """CE over P classes is >= 0 and == log P for identical rows."""
+        P, d = 16, 8
+        hs = jax.random.normal(jax.random.PRNGKey(seed % (2 ** 31)), (P, d))
+        loss = float(ops.inbatch_loss(hs, jnp.zeros((P, d))))
+        np.testing.assert_allclose(loss, np.log(P), rtol=1e-5)
+
+
+class TestRecallProperties:
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_recall_bounds(self, seed):
+        rng = np.random.default_rng(seed % (2 ** 31))
+        U, I, d = 10, 20, 4
+        ue = rng.normal(size=(U, d))
+        ie = rng.normal(size=(I, d))
+        train = np.stack([rng.integers(0, U, 30), rng.integers(0, I, 30)], 1)
+        evalp = np.stack([rng.integers(0, U, 10), rng.integers(0, I, 10)], 1)
+        out = evaluate_recall(ue, ie, train, evalp, top_k=5)
+        for v in out.values():
+            assert 0.0 <= v <= 1.0
+
+    def test_perfect_embeddings_perfect_u2i(self):
+        """Users colinear with their single held-out item -> recall 1."""
+        U = I = 8
+        ue = np.eye(U)
+        ie = np.eye(I)
+        train = np.stack([np.arange(U), (np.arange(U) + 1) % I], 1)
+        evalp = np.stack([np.arange(U), np.arange(I)], 1)
+        # u2i: user u retrieves item u first (identical embedding)
+        out = evaluate_recall(ue, ie, train, evalp, top_k=1)
+        assert out["u2i"] == 1.0
