@@ -1,0 +1,12 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench-throughput
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m quick
+
+bench-throughput:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --quick

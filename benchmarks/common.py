@@ -38,6 +38,11 @@ def trainer(
     num_negatives: int = 5,
     seed: int = 0,
     num_partitions: int = 4,
+    prefetch_batches: int = 2,
+    sync_every_step: bool = False,
+    eval_at_end: bool = True,
+    engine_build: str = "vectorized",
+    slot_mode: str = "bag",
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -53,6 +58,7 @@ def trainer(
         fanouts=() if walk_based else (4, 3),
         relations=RELS,
         use_side_info=side_info,
+        slot_mode=slot_mode,
         loss=loss,
     )
     pc = PipelineConfig(
@@ -61,11 +67,14 @@ def trainer(
         ego=None if walk_based else EgoConfig(relations=list(RELS), fanouts=[4, 3]),
         order=order, batch_pairs=batch_pairs, walks_per_round=64,
     )
-    eng = DistributedGraphEngine(g, num_partitions=num_partitions)
+    eng = DistributedGraphEngine(g, num_partitions=num_partitions, build=engine_build)
     return Graph4RecTrainer(
         ds, eng, mc, pc,
         TrainerConfig(num_steps=steps, log_every=0, eval_max_users=128,
-                      sparse_lr=1.0, seed=seed),
+                      sparse_lr=1.0, seed=seed,
+                      prefetch_batches=prefetch_batches,
+                      sync_every_step=sync_every_step,
+                      eval_at_end=eval_at_end),
     )
 
 

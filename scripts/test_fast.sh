@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Sub-30s feedback loop: runs only tests marked @pytest.mark.quick.
+# The full tier-1 suite stays `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q -m quick "$@"

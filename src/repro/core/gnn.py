@@ -23,7 +23,7 @@ production hot path (interpret-mode on CPU).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,15 +32,25 @@ Params = Dict[str, jnp.ndarray]
 
 GNN_TYPES = ("gcn", "sage-mean", "sage-sum", "gat", "gin", "lightgcn", "ngcf")
 
-# When enabled, masked mean/sum aggregation routes through the Pallas
-# seg_aggr kernel (kernels/seg_aggr.py) — the TPU production hot path.
-# Trace-time switch: flip before jit/trace (tests cover both paths).
+# Process-wide default for routing masked mean/sum aggregation through the
+# Pallas seg_aggr kernel (kernels/seg_aggr.py) — the TPU production hot path.
+# The production way to select the kernel is per-config: set
+# ``HeteroGNNConfig.use_kernel_aggr`` (or ``TrainerConfig.use_kernel_aggr``,
+# which forwards to it); every aggregation entry point below also takes an
+# explicit ``use_kernel`` argument. This global only backs the legacy
+# ``use_kernel_aggregation()`` trace-time switch and applies when neither is
+# specified (``use_kernel=None``).
 _USE_KERNEL_AGGR = False
 
 
 def use_kernel_aggregation(flag: bool) -> None:
+    """Legacy process-wide switch; prefer ``HeteroGNNConfig.use_kernel_aggr``."""
     global _USE_KERNEL_AGGR
     _USE_KERNEL_AGGR = bool(flag)
+
+
+def _kernel_selected(use_kernel: Optional[bool]) -> bool:
+    return _USE_KERNEL_AGGR if use_kernel is None else bool(use_kernel)
 
 
 def _dense(key, d_in, d_out, scale=None):
@@ -56,9 +66,11 @@ def _kernel_aggr(h_nbr: jnp.ndarray, mask: jnp.ndarray, mode: str) -> jnp.ndarra
     return out.reshape(B, W, d)
 
 
-def masked_mean(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+def masked_mean(
+    h_nbr: jnp.ndarray, mask: jnp.ndarray, use_kernel: Optional[bool] = None
+) -> jnp.ndarray:
     """(B,W,F,d),(B,W,F) -> (B,W,d); zero where no valid neighbor."""
-    if _USE_KERNEL_AGGR:
+    if _kernel_selected(use_kernel):
         return _kernel_aggr(h_nbr, mask, "mean")
     m = mask[..., None].astype(h_nbr.dtype)
     s = (h_nbr * m).sum(axis=-2)
@@ -66,8 +78,10 @@ def masked_mean(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return s / c
 
 
-def masked_sum(h_nbr: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
-    if _USE_KERNEL_AGGR:
+def masked_sum(
+    h_nbr: jnp.ndarray, mask: jnp.ndarray, use_kernel: Optional[bool] = None
+) -> jnp.ndarray:
+    if _kernel_selected(use_kernel):
         return _kernel_aggr(h_nbr, mask, "sum")
     return (h_nbr * mask[..., None].astype(h_nbr.dtype)).sum(axis=-2)
 
@@ -104,21 +118,23 @@ def apply_layer(
     h_self: jnp.ndarray,  # (B, W, d)
     h_nbr: jnp.ndarray,  # (B, W, F, d)
     mask: jnp.ndarray,  # (B, W, F) bool
+    use_kernel: Optional[bool] = None,  # None -> legacy global flag
 ) -> jnp.ndarray:
     if gnn_type == "lightgcn":
         # Linear propagation only — "transformation has no positive effect on CF".
-        return masked_mean(h_nbr, mask)
+        return masked_mean(h_nbr, mask, use_kernel)
     if gnn_type == "gcn":
         agg = masked_mean(
             jnp.concatenate([h_self[..., None, :], h_nbr], axis=-2),
             jnp.concatenate([jnp.ones_like(mask[..., :1]), mask], axis=-1),
+            use_kernel,
         )
         return jax.nn.relu(agg @ params["w"])
     if gnn_type == "sage-mean":
-        agg = masked_mean(h_nbr, mask)
+        agg = masked_mean(h_nbr, mask, use_kernel)
         return jax.nn.relu(jnp.concatenate([h_self, agg], axis=-1) @ params["w"])
     if gnn_type == "sage-sum":
-        agg = masked_sum(h_nbr, mask)
+        agg = masked_sum(h_nbr, mask, use_kernel)
         return jax.nn.relu(jnp.concatenate([h_self, agg], axis=-1) @ params["w"])
     if gnn_type == "gat":
         wh_self = h_self @ params["w"]  # (B,W,d)
@@ -133,10 +149,10 @@ def apply_layer(
         att = jnp.where(mask, att, 0.0)  # all-PAD rows -> zero output
         return jax.nn.relu((att[..., None] * wh_nbr).sum(axis=-2))
     if gnn_type == "gin":
-        agg = (1.0 + params["eps"]) * h_self + masked_sum(h_nbr, mask)
+        agg = (1.0 + params["eps"]) * h_self + masked_sum(h_nbr, mask, use_kernel)
         return jax.nn.relu(jax.nn.relu(agg @ params["w1"]) @ params["w2"])
     if gnn_type == "ngcf":
-        m = masked_mean(h_nbr, mask)
+        m = masked_mean(h_nbr, mask, use_kernel)
         return jax.nn.leaky_relu(
             (h_self + m) @ params["w1"] + (m * h_self) @ params["w2"],
             negative_slope=0.2,

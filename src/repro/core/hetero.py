@@ -32,6 +32,9 @@ class HeteroGNNConfig:
     dim: int = 64
     alpha: float = 0.15  # residual weight on h^0
     relation_agg: str = "uniform"  # "uniform" | "gatne"
+    # Route masked mean/sum through the Pallas seg_aggr kernel. None defers
+    # to the legacy process-wide gnn.use_kernel_aggregation() flag.
+    use_kernel_aggr: "bool | None" = None
 
 
 def init_hetero_params(key: jax.Array, cfg: HeteroGNNConfig) -> Params:
@@ -102,7 +105,8 @@ def hetero_forward(
                 lp = _layer_params(params, layer, r)
                 outs.append(
                     gnn_lib.apply_layer(
-                        lp, cfg.gnn_type, h[k], child[:, :, r], child_mask[:, :, r]
+                        lp, cfg.gnn_type, h[k], child[:, :, r], child_mask[:, :, r],
+                        use_kernel=cfg.use_kernel_aggr,
                     )
                 )
             h_rel = jnp.stack(outs, axis=-2)  # (B, W, R, d)

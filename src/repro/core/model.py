@@ -13,6 +13,7 @@ Everything is pure-functional: ``init_model_params`` returns a dict pytree,
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -36,6 +37,11 @@ class Graph4RecConfig:
     fanouts: Tuple[int, ...] = ()
     relations: Tuple[str, ...] = ()  # relation order used for ego sampling
     use_side_info: bool = False
+    # "bag": side info as precomputed count-matrix GEMMs (embedding-bag) —
+    # no host-side value padding, no per-value backward scatter. Exactly
+    # equivalent to "values" (padded value lists through embed_nodes); keep
+    # "values" for slots whose vocab is too large for dense count rows.
+    slot_mode: str = "bag"  # bag | values
     loss: str = "inbatch_softmax"  # inbatch_softmax | inbatch_sigmoid | neg_sampling
     temperature: float = 1.0
     use_kernel_loss: bool = False
@@ -69,15 +75,27 @@ def sparse_dense_split(params: Params) -> Tuple[Params, Params]:
 
 
 # ------------------------------------------------------------------ encoding
+def _embed(
+    e: Params,
+    ids: jnp.ndarray,
+    slots: Optional[Mapping[str, jnp.ndarray]],
+    slot_counts: Optional[Mapping[str, jnp.ndarray]],
+) -> jnp.ndarray:
+    if slot_counts is not None:
+        return emb.embed_nodes_bag(e, ids, slot_counts, pad_id=PAD)
+    return emb.embed_nodes(e, ids, slots, pad_id=PAD)
+
+
 def encode_ids(
     params: Params,
     cfg: Graph4RecConfig,
     ids: jnp.ndarray,
     slots: Optional[Mapping[str, jnp.ndarray]] = None,
+    slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
 ) -> jnp.ndarray:
     """Walk-based encoder: the embedding row (+ side info) IS the output."""
     e, _ = split_params(params)
-    return emb.embed_nodes(e, ids, slots, pad_id=PAD)
+    return _embed(e, ids, slots, slot_counts)
 
 
 def encode_ego(
@@ -85,6 +103,7 @@ def encode_ego(
     cfg: Graph4RecConfig,
     levels: Sequence[jnp.ndarray],  # level k ids (B, W_k)
     level_slots: Optional[Sequence[Optional[Mapping[str, jnp.ndarray]]]] = None,
+    slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
 ) -> jnp.ndarray:
     """GNN encoder over a batched relation-wise ego graph -> (B, d)."""
     e, g = split_params(params)
@@ -92,23 +111,55 @@ def encode_ego(
     masks = []
     for k, ids in enumerate(levels):
         slots = level_slots[k] if level_slots else None
-        feats.append(emb.embed_nodes(e, ids, slots, pad_id=PAD))
+        feats.append(_embed(e, ids, slots, slot_counts))
         masks.append(ids >= 0)
     return hetero_forward(g, cfg.gnn, feats, masks, list(cfg.fanouts))
 
 
-def encode(params: Params, cfg: Graph4RecConfig, sample) -> jnp.ndarray:
+def encode(
+    params: Params,
+    cfg: Graph4RecConfig,
+    sample,
+    slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
+) -> jnp.ndarray:
     if cfg.is_walk_based:
         ids, slots = sample
-        return encode_ids(params, cfg, ids, slots)
+        return encode_ids(params, cfg, ids, slots, slot_counts)
     levels, slots = sample
-    return encode_ego(params, cfg, levels, slots)
+    return encode_ego(params, cfg, levels, slots, slot_counts)
+
+
+# (graph -> {slot specs -> count arrays}); weak keys so graphs can be GC'd.
+_slot_count_cache: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def slot_count_arrays(graph, cfg: Graph4RecConfig) -> Dict[str, jnp.ndarray]:
+    """Count matrices for every configured slot (the 'bag' side-info path).
+
+    Cached per (graph, slot specs): slot values are static data, so callers
+    like ``device_batch`` can omit the precomputed argument without paying a
+    per-batch O(num_nodes x vocab) rebuild.
+    """
+    per_graph = _slot_count_cache.setdefault(graph, {})
+    key = tuple(cfg.embedding.slots)
+    if key not in per_graph:
+        per_graph[key] = {
+            spec.name: jnp.asarray(
+                emb.slot_count_matrix(
+                    graph.slots[spec.name].indptr, graph.slots[spec.name].values,
+                    graph.num_nodes, spec.vocab_size, spec.max_values,
+                )
+            )
+            for spec in cfg.embedding.slots
+        }
+    return per_graph[key]
 
 
 # ---------------------------------------------------------------------- loss
 def loss_fn(params: Params, cfg: Graph4RecConfig, batch: Mapping) -> jnp.ndarray:
-    h_src = encode(params, cfg, batch["src"])
-    h_dst = encode(params, cfg, batch["dst"])
+    slot_counts = batch.get("slot_counts")
+    h_src = encode(params, cfg, batch["src"], slot_counts)
+    h_dst = encode(params, cfg, batch["dst"], slot_counts)
     if cfg.loss == "inbatch_softmax":
         return loss_lib.inbatch_softmax_loss(
             h_src, h_dst, cfg.temperature, use_kernel=cfg.use_kernel_loss
@@ -116,7 +167,7 @@ def loss_fn(params: Params, cfg: Graph4RecConfig, batch: Mapping) -> jnp.ndarray
     if cfg.loss == "inbatch_sigmoid":
         return loss_lib.inbatch_sigmoid_loss(h_src, h_dst)
     if cfg.loss == "neg_sampling":
-        h_neg = encode(params, cfg, batch["neg"])
+        h_neg = encode(params, cfg, batch["neg"], slot_counts)
         P = h_src.shape[0]
         return loss_lib.neg_sampling_loss(
             h_src, h_dst, h_neg.reshape(P, -1, h_neg.shape[-1])
@@ -137,10 +188,14 @@ def _slots_for_ids(
     return out
 
 
+def _values_mode(cfg: Graph4RecConfig) -> bool:
+    return cfg.use_side_info and cfg.slot_mode == "values"
+
+
 def _ego_arrays(graph, ego: EgoBatch, cfg: Graph4RecConfig):
     levels = [jnp.asarray(l) for l in ego.levels]
     slots = None
-    if cfg.use_side_info:
+    if _values_mode(cfg):
         slots = [
             _slots_for_ids(graph, l, cfg.embedding.slots) for l in ego.levels
         ]
@@ -150,14 +205,27 @@ def _ego_arrays(graph, ego: EgoBatch, cfg: Graph4RecConfig):
     return (levels, slots)
 
 
-def device_batch(graph, batch: TrainBatch, cfg: Graph4RecConfig) -> Dict:
-    """Convert a host TrainBatch into jit-consumable arrays."""
+def device_batch(
+    graph,
+    batch: TrainBatch,
+    cfg: Graph4RecConfig,
+    slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
+) -> Dict:
+    """Convert a host TrainBatch into jit-consumable arrays.
+
+    In 'bag' slot mode no per-value padding happens here at all — side info
+    rides along as the (cached) count matrices from ``slot_count_arrays``.
+    Callers that loop over batches should build those once and pass them in;
+    they are computed on the fly otherwise.
+    """
     out: Dict = {}
+    if cfg.use_side_info and cfg.slot_mode == "bag" and slot_counts is None:
+        slot_counts = slot_count_arrays(graph, cfg)
     if cfg.is_walk_based:
         for name, ids in (("src", batch.src_ids), ("dst", batch.dst_ids)):
             slots = (
                 {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, cfg.embedding.slots).items()}
-                if cfg.use_side_info
+                if _values_mode(cfg)
                 else None
             )
             out[name] = (jnp.asarray(ids), slots)
@@ -165,7 +233,7 @@ def device_batch(graph, batch: TrainBatch, cfg: Graph4RecConfig) -> Dict:
             ids = batch.neg_ids.reshape(-1)
             slots = (
                 {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, cfg.embedding.slots).items()}
-                if cfg.use_side_info
+                if _values_mode(cfg)
                 else None
             )
             out["neg"] = (jnp.asarray(ids), slots)
@@ -174,6 +242,8 @@ def device_batch(graph, batch: TrainBatch, cfg: Graph4RecConfig) -> Dict:
         out["dst"] = _ego_arrays(graph, batch.dst_ego, cfg)
         if batch.neg_ego is not None:
             out["neg"] = _ego_arrays(graph, batch.neg_ego, cfg)
+    if cfg.use_side_info and cfg.slot_mode == "bag":
+        out["slot_counts"] = dict(slot_counts)
     return out
 
 
@@ -192,18 +262,27 @@ def encode_all_nodes(
     encode (the paper evaluates the same way — inference-time neighbor
     sampling)."""
     N = graph.num_nodes
+    slot_counts = (
+        slot_count_arrays(graph, cfg)
+        if cfg.use_side_info and cfg.slot_mode == "bag"
+        else None
+    )
     if cfg.is_walk_based:
         ids = np.arange(N, dtype=np.int64)
         outs = []
         for lo in range(0, N, batch_size):
             chunk = ids[lo : lo + batch_size]
             slots = None
-            if cfg.use_side_info:
+            if _values_mode(cfg):
                 slots = {
                     k: jnp.asarray(v)
                     for k, v in _slots_for_ids(graph, chunk, cfg.embedding.slots).items()
                 }
-            outs.append(np.asarray(encode_ids(params, cfg, jnp.asarray(chunk), slots)))
+            outs.append(
+                np.asarray(
+                    encode_ids(params, cfg, jnp.asarray(chunk), slots, slot_counts)
+                )
+            )
         return np.concatenate(outs, axis=0)
 
     from repro.sampling.ego import sample_ego_batch
@@ -215,5 +294,5 @@ def encode_all_nodes(
         ids = np.arange(lo, min(lo + batch_size, N), dtype=np.int64)
         ego = sample_ego_batch(rng, engine, ids, ego_cfg)
         levels, slots = _ego_arrays(graph, ego, cfg)
-        outs.append(np.asarray(encode_ego(params, cfg, levels, slots)))
+        outs.append(np.asarray(encode_ego(params, cfg, levels, slots, slot_counts)))
     return np.concatenate(outs, axis=0)

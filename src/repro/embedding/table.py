@@ -31,6 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.utils.ragged import ragged_row_offsets
+
 
 @dataclasses.dataclass(frozen=True)
 class SlotSpec:
@@ -91,6 +93,30 @@ def lookup(table: jnp.ndarray, ids: jnp.ndarray, pad_id: int = -1) -> jnp.ndarra
     return jnp.where((ids >= 0)[..., None], rows, 0.0)
 
 
+def slot_count_matrix(
+    slot_indptr: np.ndarray,
+    slot_values: np.ndarray,
+    num_nodes: int,
+    vocab_size: int,
+    max_values: int,
+) -> np.ndarray:
+    """(num_nodes, vocab) float32 matrix of each node's slot-value counts.
+
+    Row n counts the node's first ``max_values`` ragged values — the exact
+    set ``pad_slot_values`` would emit — so ``counts[n] @ table`` equals the
+    padded gather-and-sum. Built host-side once per table (vectorized
+    ``np.add.at``); see ``embed_nodes_bag`` for how it replaces the per-value
+    device gather.
+    """
+    counts = np.zeros((num_nodes, vocab_size), dtype=np.float32)
+    starts = np.asarray(slot_indptr[:-1], dtype=np.int64)
+    lens = np.minimum(slot_indptr[1:] - starts, max_values).astype(np.int64)
+    if lens.sum():
+        node_of, off = ragged_row_offsets(lens)
+        np.add.at(counts, (node_of, slot_values[starts[node_of] + off]), 1.0)
+    return counts
+
+
 def ps_lookup(
     table: jnp.ndarray,
     ids: jnp.ndarray,
@@ -117,14 +143,20 @@ def ps_lookup(
         out = jnp.where(owned[..., None], out, 0.0)
         return jax.lax.psum(out, model_axis)
 
-    other_axes = tuple(a for a in mesh.axis_names if a != model_axis)
-    return jax.shard_map(
-        _local,
-        mesh=mesh,
-        in_specs=(P(model_axis, None), P()),
-        out_specs=P(),
-        check_vma=False,
-    )(table, jnp.where(ids >= 0, ids, 0)) * (ids >= 0)[..., None]
+    mapped = _shard_map(_local, mesh, in_specs=(P(model_axis, None), P()), out_specs=P())
+    return mapped(table, jnp.where(ids >= 0, ids, 0)) * (ids >= 0)[..., None]
+
+
+def _shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Version-tolerant shard_map: new JAX exposes ``jax.shard_map`` with
+    ``check_vma``; older releases only have the experimental module with
+    ``check_rep``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+
+    return sm_exp(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 
 def embed_nodes(
@@ -146,6 +178,29 @@ def embed_nodes(
     return h
 
 
+def embed_nodes_bag(
+    params: Mapping[str, jnp.ndarray],
+    ids: jnp.ndarray,
+    slot_counts: Mapping[str, jnp.ndarray],
+    pad_id: int = -1,
+) -> jnp.ndarray:
+    """Side-info embedding via per-node value counts (embedding-bag form).
+
+    ``slot_counts[name]``: (num_nodes, vocab) from ``slot_count_matrix``.
+    Exactly equivalent to ``embed_nodes`` over the padded value lists the
+    counts were built from — the gathered count row is zero for PAD ids, and
+    ``counts_row @ table`` is the same truncated sum — but the per-value
+    gather and its backward scatter-add become two GEMMs, which is much
+    faster whenever dense count rows are affordable. Large-vocab slots
+    should stay on ``embed_nodes`` (counts are dense per node here).
+    """
+    h = lookup(params["node"], ids, pad_id)
+    for name, cmat in slot_counts.items():
+        c = lookup(cmat, ids, pad_id)  # (..., vocab); zero row for PAD ids
+        h = h + c @ params[f"slot:{name}"]
+    return h
+
+
 # --------------------------------------------------------------- side info
 def pad_slot_values(
     slot_indptr: np.ndarray,
@@ -154,7 +209,37 @@ def pad_slot_values(
     max_values: int,
     pad_id: int = -1,
 ) -> np.ndarray:
-    """Host-side: ragged slot values -> (len(ids), max_values) padded."""
+    """Host-side: ragged slot values -> (len(ids), max_values) padded.
+
+    Fully vectorized ragged-to-padded scatter: every (row, column) output
+    position and its source position in ``slot_values`` are computed as flat
+    index arrays, so the copy is one fancy-indexed assignment regardless of
+    how many ids are requested.
+    """
+    ids = np.asarray(ids).reshape(-1)
+    out = np.full((len(ids), max_values), pad_id, dtype=np.int64)
+    valid = np.flatnonzero(ids >= 0)
+    if len(valid) == 0:
+        return out
+    vids = ids[valid]
+    starts = np.asarray(slot_indptr[vids], dtype=np.int64)
+    lens = np.minimum(slot_indptr[vids + 1] - starts, max_values).astype(np.int64)
+    if lens.sum() == 0:
+        return out
+    row_of, col = ragged_row_offsets(lens)
+    out[valid[row_of], col] = slot_values[starts[row_of] + col]
+    return out
+
+
+def _pad_slot_values_loop(
+    slot_indptr: np.ndarray,
+    slot_values: np.ndarray,
+    ids: np.ndarray,
+    max_values: int,
+    pad_id: int = -1,
+) -> np.ndarray:
+    """Reference per-node loop (seed implementation) for equivalence tests
+    and the serial arm of benchmarks/bench_throughput.py."""
     ids = np.asarray(ids).reshape(-1)
     out = np.full((len(ids), max_values), pad_id, dtype=np.int64)
     for k, node in enumerate(ids):

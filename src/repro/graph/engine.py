@@ -19,46 +19,95 @@ sampling pipeline (repro/sampling) can run against either.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
 from repro.graph.hetero_graph import CSR, HeteroGraph
+from repro.utils.ragged import ragged_row_offsets
 
 
 @dataclasses.dataclass
 class EngineStats:
-    """Counters mirroring the paper's communication-cost discussion."""
+    """Counters mirroring the paper's communication-cost discussion.
+
+    Updates go through ``add`` under a lock: the prefetching trainer samples
+    from a producer thread while mid-training evaluation samples from the
+    main thread, and unguarded ``+=`` would drop increments.
+    """
 
     neighbor_requests: int = 0  # total node->neighbors queries
     cross_partition_requests: int = 0  # queries answered by a remote partition
     batches: int = 0
 
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
+    def add(self, requests: int, cross: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.neighbor_requests += requests
+            self.cross_partition_requests += cross
+
     def reset(self) -> None:
-        self.neighbor_requests = 0
-        self.cross_partition_requests = 0
-        self.batches = 0
+        with self._lock:
+            self.neighbor_requests = 0
+            self.cross_partition_requests = 0
+            self.batches = 0
+
+
+def _gather_rows(
+    indptr: np.ndarray, indices: np.ndarray, rows: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather CSR ``rows`` into a compacted sub-CSR with one vectorized slice.
+
+    Builds a flat source-index array mapping every output position to its
+    position in ``indices`` (start of its row plus offset within the row), so
+    the whole copy is a single fancy-index gather — no per-node Python loop.
+    """
+    starts = indptr[rows]
+    lengths = indptr[rows + 1] - starts
+    out_indptr = np.zeros(len(rows) + 1, dtype=np.int64)
+    np.cumsum(lengths, out=out_indptr[1:])
+    row_of, offsets = ragged_row_offsets(lengths)
+    out_indices = indices[starts[row_of] + offsets]
+    return out_indptr, out_indices
+
+
+def _gather_rows_loop(
+    indptr: np.ndarray, indices: np.ndarray, rows: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference per-node row-copy loop (the seed implementation).
+
+    Kept for the vectorized-equivalence test and benchmarks/bench_throughput's
+    loop-vs-vectorized build comparison; not used on the production path.
+    """
+    starts = indptr[rows]
+    ends = indptr[rows + 1]
+    lengths = ends - starts
+    out_indptr = np.zeros(len(rows) + 1, dtype=np.int64)
+    np.cumsum(lengths, out=out_indptr[1:])
+    out_indices = np.empty(int(out_indptr[-1]), dtype=indices.dtype)
+    for k in range(len(rows)):
+        out_indices[out_indptr[k] : out_indptr[k + 1]] = indices[starts[k] : ends[k]]
+    return out_indptr, out_indices
 
 
 class _Partition:
     """One graph server: adjacency of the nodes it owns, per relation."""
 
-    def __init__(self, part_id: int, num_parts: int, graph: HeteroGraph):
+    def __init__(
+        self, part_id: int, num_parts: int, graph: HeteroGraph, build: str = "vectorized"
+    ):
         self.part_id = part_id
         self.num_parts = num_parts
+        gather = {"vectorized": _gather_rows, "loop": _gather_rows_loop}[build]
         # Store only owned rows, re-indexed by local row = global // num_parts.
         self.rel_rows: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
         owned = np.arange(part_id, graph.num_nodes, num_parts, dtype=np.int64)
         for name, csr in graph.relations.items():
-            starts = csr.indptr[owned]
-            ends = csr.indptr[owned + 1]
-            lengths = ends - starts
-            indptr = np.zeros(len(owned) + 1, dtype=np.int64)
-            np.cumsum(lengths, out=indptr[1:])
-            indices = np.empty(int(indptr[-1]), dtype=csr.indices.dtype)
-            for k in range(len(owned)):
-                indices[indptr[k] : indptr[k + 1]] = csr.indices[starts[k] : ends[k]]
-            self.rel_rows[name] = (indptr, indices)
+            self.rel_rows[name] = gather(csr.indptr, csr.indices, owned)
 
     def sample(
         self,
@@ -84,12 +133,19 @@ class _Partition:
 class DistributedGraphEngine:
     """Node-partitioned graph engine with request routing + stats."""
 
-    def __init__(self, graph: HeteroGraph, num_partitions: int = 4, client_part: int = 0):
+    def __init__(
+        self,
+        graph: HeteroGraph,
+        num_partitions: int = 4,
+        client_part: int = 0,
+        build: str = "vectorized",
+    ):
         self.graph = graph
         self.num_partitions = int(num_partitions)
         self.client_part = int(client_part)  # partition co-located with the caller
         self.partitions = [
-            _Partition(p, self.num_partitions, graph) for p in range(self.num_partitions)
+            _Partition(p, self.num_partitions, graph, build=build)
+            for p in range(self.num_partitions)
         ]
         self.stats = EngineStats()
         self.relation_names = graph.relation_names()
@@ -105,10 +161,8 @@ class DistributedGraphEngine:
         pad_id: int = -1,
     ) -> np.ndarray:
         nodes = np.asarray(nodes, dtype=np.int64)
-        self.stats.batches += 1
-        self.stats.neighbor_requests += len(nodes)
         owners = nodes % self.num_partitions
-        self.stats.cross_partition_requests += int((owners != self.client_part).sum())
+        self.stats.add(len(nodes), int((owners != self.client_part).sum()))
         out = np.empty((len(nodes), num_samples), dtype=np.int64)
         for p in range(self.num_partitions):
             mask = owners == p

@@ -9,17 +9,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """Version-tolerant ``jax.make_mesh``: newer JAX accepts ``axis_types``
+    (and ``jax.sharding.AxisType``); older releases have neither, and the
+    default (auto) behavior is what we want anyway — so fall back to plain
+    ``make_mesh`` when the kwarg or the enum is unavailable."""
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU tests (all axes size 1)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((1, 1), ("data", "model"))

@@ -10,7 +10,8 @@ recall trade-off (paper Table 7), with the engine's request counters
 providing the communication-cost signal.
 
 The pipeline emits fixed-size batches (shape-static for jit): exactly
-``batch_pairs`` pairs per batch, trimming the tail.
+``batch_pairs`` pairs per batch; pairs beyond the last full batch of a round
+are carried into the next round, never dropped.
 """
 from __future__ import annotations
 
@@ -29,6 +30,24 @@ from repro.sampling.pairs import (
 from repro.walk.metapath import MetapathWalker, WalkConfig
 
 PAD = -1
+
+# ``batches`` raises after this many consecutive rounds with zero pairs
+# instead of spinning forever on a degenerate walk/pair configuration.
+_MAX_EMPTY_ROUNDS = 100
+
+
+def _concat_egos(parts: Sequence[EgoBatch]) -> Optional[EgoBatch]:
+    if not parts:
+        return None
+    if len(parts) == 1:
+        return parts[0]
+    return EgoBatch(
+        parts[0].config,
+        [
+            np.concatenate([p.levels[k] for p in parts], axis=0)
+            for k in range(len(parts[0].levels))
+        ],
+    )
 
 
 @dataclasses.dataclass
@@ -104,29 +123,63 @@ class SamplePipeline:
 
     # ---------------------------------------------------------------- batches
     def batches(self, num_batches: int) -> Iterator[TrainBatch]:
+        """Emit exactly ``num_batches`` fixed-size batches.
+
+        Pairs left over after chunking a round into ``batch_pairs``-sized
+        batches are carried into the next round (never dropped), so rounds
+        smaller than one batch still make progress and the loop always
+        terminates as long as walks keep producing pairs.
+        """
         cfg = self.config
         P = cfg.batch_pairs
         buf_src: list = []
         buf_dst: list = []
         buf_se: list = []
         buf_de: list = []
+        have = 0
         emitted = 0
+        empty_rounds = 0
         while emitted < num_batches:
+            got = 0
             for src, dst, se, de in self._round():
-                # chunk into fixed-size batches
-                n = len(src)
-                for lo in range(0, n - P + 1, P):
-                    idx = slice(lo, lo + P)
-                    sl = np.arange(lo, lo + P)
-                    batch = self._finalize(
-                        src[idx], dst[idx],
-                        se.take(sl) if se is not None else None,
-                        de.take(sl) if de is not None else None,
-                    )
-                    yield batch
-                    emitted += 1
-                    if emitted >= num_batches:
-                        return
+                buf_src.append(src)
+                buf_dst.append(dst)
+                if se is not None:
+                    buf_se.append(se)
+                    buf_de.append(de)
+                got += len(src)
+            have += got
+            empty_rounds = empty_rounds + 1 if got == 0 else 0
+            if empty_rounds >= _MAX_EMPTY_ROUNDS:
+                raise RuntimeError(
+                    f"{_MAX_EMPTY_ROUNDS} consecutive sampling rounds produced no "
+                    "pairs; check walk_len/win_size against the graph"
+                )
+            if have < P:
+                continue
+            src = np.concatenate(buf_src) if len(buf_src) > 1 else buf_src[0]
+            dst = np.concatenate(buf_dst) if len(buf_dst) > 1 else buf_dst[0]
+            se = _concat_egos(buf_se)
+            de = _concat_egos(buf_de)
+            n_full = have // P
+            for bi in range(n_full):
+                sl = slice(bi * P, (bi + 1) * P)
+                yield self._finalize(
+                    src[sl], dst[sl],
+                    se.take(sl) if se is not None else None,
+                    de.take(sl) if de is not None else None,
+                )
+                emitted += 1
+                if emitted >= num_batches:
+                    return
+            # carry the sub-batch tail into the next round
+            lo = n_full * P
+            have -= lo
+            buf_src = [src[lo:]] if have else []
+            buf_dst = [dst[lo:]] if have else []
+            tail = slice(lo, None)
+            buf_se = [se.take(tail)] if se is not None and have else []
+            buf_de = [de.take(tail)] if de is not None and have else []
 
     def _finalize(
         self,

@@ -4,12 +4,20 @@ The trainer wires together the paper's five pipeline stages (walk -> ego ->
 pair -> GNN -> loss) with the sparse/dense optimizer split and the recall
 evaluation. It is the engine behind examples/train_recsys.py and every
 RQ benchmark.
+
+Throughput design: host-side sampling + device-batch conversion run in a
+bounded background prefetch thread (``prefetch_batches`` deep), overlapping
+with the jitted grad step, and the loop never forces a device sync per step
+(losses stay on device until the end; set ``sync_every_step=True`` for the
+strictly serial sample->sync->step loop, e.g. as a benchmark baseline).
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +41,18 @@ class TrainerConfig:
     eval_every: int = 0  # 0 -> only at end
     eval_top_k: int = 100
     eval_max_users: int = 256
+    eval_at_end: bool = True
     log_every: int = 50
     seed: int = 0
+    # Depth of the background host->device prefetch queue. 0 disables the
+    # prefetch thread and runs the serial sample->step loop.
+    prefetch_batches: int = 2
+    # Force a device sync (float(loss)) after every step — the seed's serial
+    # behavior; benchmarks use it as the baseline arm.
+    sync_every_step: bool = False
+    # Route GNN aggregation through the Pallas seg_aggr kernel. None leaves
+    # the model config (HeteroGNNConfig.use_kernel_aggr) untouched.
+    use_kernel_aggr: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -44,6 +62,81 @@ class TrainResult:
     eval_history: List[Dict[str, float]]  # appended at each eval point
     wall_time_s: float
     pairs_seen: int
+
+
+_DONE = object()
+
+
+class _Prefetcher:
+    """Bounded background-thread prefetch between the host pipeline and the
+    device loop. Producer exceptions re-raise in the consumer."""
+
+    def __init__(self, it: Iterator, depth: int):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(depth)))
+        self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._fill, args=(it,), name="repro-prefetch", daemon=True
+        )
+        self._thread.start()
+
+    def _fill(self, it: Iterator) -> None:
+        try:
+            for item in it:
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as e:  # surfaced via __next__
+            self._err = e
+        finally:
+            # The sentinel must land even when the queue is full, or the
+            # consumer would block forever — keep trying until it fits or
+            # the consumer has already closed us.
+            while not self._stop.is_set():
+                try:
+                    self._q.put(_DONE, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> "_Prefetcher":
+        return self
+
+    def __next__(self):
+        while True:
+            item = self._q.get()
+            if item is _DONE:
+                self._thread.join(timeout=5.0)
+                if self._err is not None:
+                    raise self._err
+                raise StopIteration
+            return item
+
+    def close(self) -> None:
+        """Unblock and retire the producer (early consumer exit).
+
+        The producer only observes the stop flag between queue puts, so a
+        thread deep inside one sampling round can outlive the join timeout;
+        it is a daemon and will die with the process, but warn so overlapping
+        engine use (e.g. an immediate retrain) is explainable.
+        """
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+        if self._thread.is_alive():
+            log.warning(
+                "prefetch producer still running after close(); it will exit "
+                "after its current sampling round"
+            )
 
 
 class Graph4RecTrainer:
@@ -57,6 +150,13 @@ class Graph4RecTrainer:
     ):
         self.dataset = dataset
         self.engine = engine
+        if cfg.use_kernel_aggr is not None and model_cfg.gnn is not None:
+            model_cfg = dataclasses.replace(
+                model_cfg,
+                gnn=dataclasses.replace(
+                    model_cfg.gnn, use_kernel_aggr=cfg.use_kernel_aggr
+                ),
+            )
         self.model_cfg = model_cfg
         self.pipe_cfg = pipe_cfg
         self.cfg = cfg
@@ -64,6 +164,13 @@ class Graph4RecTrainer:
             opt_lib.adagrad(cfg.sparse_lr),
             opt_lib.adam(cfg.dense_lr),
             select_a=lambda k: k.startswith("emb/"),
+        )
+        # 'bag' side info: one count matrix per slot, built once and shared
+        # by every batch (see embedding/table.py:embed_nodes_bag).
+        self._slot_counts = (
+            model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
+            if self.model_cfg.use_side_info and self.model_cfg.slot_mode == "bag"
+            else None
         )
         self._grad_step = jax.jit(self._make_grad_step())
 
@@ -99,26 +206,52 @@ class Graph4RecTrainer:
             top_k=self.cfg.eval_top_k, max_users=self.cfg.eval_max_users,
         )
 
+    def _device_batches(
+        self, pipeline: SamplePipeline, num: int
+    ) -> Iterator[Tuple[Dict, int]]:
+        """Host pipeline -> (device batch, num pairs); runs inside the
+        prefetch thread so jnp conversion overlaps device compute too."""
+        for batch in pipeline.batches(num):
+            dev = model_lib.device_batch(
+                self.dataset.graph, batch, self.model_cfg,
+                slot_counts=self._slot_counts,
+            )
+            yield dev, len(batch.src_ids)
+
     def train(self, params: Optional[Dict] = None) -> TrainResult:
         cfg = self.cfg
         params = params if params is not None else self.init_params()
         opt_state = self.opt.init(params)
         pipeline = SamplePipeline(self.engine, self.pipe_cfg, seed=cfg.seed)
-        losses: List[float] = []
+        loss_hist: List[jax.Array] = []
         evals: List[Dict[str, float]] = []
         pairs_seen = 0
+        batch_iter: Iterator = self._device_batches(pipeline, cfg.num_steps)
+        prefetcher: Optional[_Prefetcher] = None
+        if cfg.prefetch_batches > 0:
+            prefetcher = _Prefetcher(batch_iter, cfg.prefetch_batches)
+            batch_iter = prefetcher
         t0 = time.perf_counter()
-        for step, batch in enumerate(pipeline.batches(cfg.num_steps)):
-            dev = model_lib.device_batch(self.dataset.graph, batch, self.model_cfg)
-            params, opt_state, loss = self._grad_step(params, opt_state, dev)
-            losses.append(float(loss))
-            pairs_seen += len(batch.src_ids)
-            if cfg.log_every and (step + 1) % cfg.log_every == 0:
-                log.info("step %d loss %.4f", step + 1, float(loss))
-            if cfg.eval_every and (step + 1) % cfg.eval_every == 0:
-                evals.append(self.evaluate(params))
+        try:
+            for step, (dev, npairs) in enumerate(batch_iter):
+                params, opt_state, loss = self._grad_step(params, opt_state, dev)
+                loss_hist.append(loss)
+                pairs_seen += npairs
+                if cfg.sync_every_step:
+                    float(loss)
+                if cfg.log_every and (step + 1) % cfg.log_every == 0:
+                    log.info("step %d loss %.4f", step + 1, float(loss))
+                if cfg.eval_every and (step + 1) % cfg.eval_every == 0:
+                    evals.append(self.evaluate(params))
+        finally:
+            if prefetcher is not None:
+                prefetcher.close()
+        if loss_hist:
+            jax.block_until_ready(loss_hist[-1])
         wall = time.perf_counter() - t0
-        evals.append(self.evaluate(params))
+        losses = [float(l) for l in loss_hist]
+        if cfg.eval_at_end:
+            evals.append(self.evaluate(params))
         return TrainResult(
             params=params, losses=losses, eval_history=evals,
             wall_time_s=wall, pairs_seen=pairs_seen,

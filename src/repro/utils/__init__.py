@@ -1,2 +1,3 @@
 from repro.utils.pytree import tree_size_bytes, tree_num_params
 from repro.utils.log import get_logger
+from repro.utils.ragged import ragged_row_offsets

@@ -17,7 +17,7 @@ Two implementations:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -60,6 +60,9 @@ class MetapathWalker:
         self.paths = [parse_metapath(mp) for mp in config.metapaths]
         if not self.paths:
             raise ValueError("need at least one metapath")
+        # construction-time state only, so build the per-step relation
+        # schedule once instead of on every sampling round
+        self._rel_names, self._rel_sched = self._relation_schedule()
 
     def start_nodes(self, rng: np.random.Generator, path_idx: int, n: int) -> np.ndarray:
         """Uniform start nodes of the metapath's source type."""
@@ -72,36 +75,68 @@ class MetapathWalker:
         self, rng: np.random.Generator, starts: np.ndarray, path_idx: int = 0
     ) -> np.ndarray:
         """Walk from ``starts``: (B,) -> (B, walk_len), PAD after a dead end."""
-        rels = self.paths[path_idx]
+        path_of = np.full(len(starts), path_idx, dtype=np.int64)
+        return self._walk_batched(rng, np.asarray(starts, dtype=np.int64), path_of)
+
+    def _relation_schedule(self) -> Tuple[List[str], np.ndarray]:
+        """(relation names, (num_paths, walk_len-1) relation-id schedule)."""
+        rel_names = sorted({r for p in self.paths for r in p})
+        rel_id = {r: i for i, r in enumerate(rel_names)}
         L = self.config.walk_len
-        out = np.full((len(starts), L), PAD, dtype=np.int64)
+        sched = np.empty((len(self.paths), max(L - 1, 1)), dtype=np.int64)
+        for pi, rels in enumerate(self.paths):
+            for s in range(max(L - 1, 1)):
+                sched[pi, s] = rel_id[rels[s % len(rels)]]
+        return rel_names, sched
+
+    def _walk_batched(
+        self, rng: np.random.Generator, starts: np.ndarray, path_of: np.ndarray
+    ) -> np.ndarray:
+        """Advance walks of ALL metapaths together: per step, the frontier is
+        grouped by relation so one batched ``sample_neighbors`` request serves
+        every walk that needs that relation — one engine round-trip per
+        distinct relation per step instead of one per metapath."""
+        L = self.config.walk_len
+        B = len(starts)
+        out = np.full((B, L), PAD, dtype=np.int64)
         out[:, 0] = starts
-        cur = np.asarray(starts, dtype=np.int64)
-        alive = np.ones(len(starts), dtype=bool)
+        cur = starts.copy()
+        alive = np.ones(B, dtype=bool)
+        rel_names, sched = self._rel_names, self._rel_sched
         for step in range(1, L):
-            rel = rels[(step - 1) % len(rels)]
-            nxt = np.full_like(cur, PAD)
-            if alive.any():
-                sampled = self.g.sample_neighbors(
-                    rng, cur[alive], rel, 1, pad_id=PAD
+            if not alive.any():
+                break
+            step_rel = sched[path_of, step - 1]
+            nxt = np.full(B, PAD, dtype=np.int64)
+            for ri in np.unique(step_rel[alive]):
+                sel = alive & (step_rel == ri)
+                nxt[sel] = self.g.sample_neighbors(
+                    rng, cur[sel], rel_names[int(ri)], 1, pad_id=PAD
                 )[:, 0]
-                nxt[alive] = sampled
             alive = alive & (nxt != PAD)
             out[alive, step] = nxt[alive]
             cur = np.where(alive, nxt, cur)
         return out
 
     def generate(self, rng: np.random.Generator, num_walks: int) -> np.ndarray:
-        """Round-robin over metapaths; returns (num_walks, walk_len)."""
+        """Round-robin over metapaths; returns (num_walks, walk_len).
+
+        All metapaths advance in ONE batched walk (see ``_walk_batched``);
+        rows stay grouped by metapath index, matching the chunked layout of
+        the per-metapath implementation.
+        """
         per = max(1, num_walks // len(self.paths))
-        chunks = []
+        counts = []
         for pi in range(len(self.paths)):
             n = per if pi < len(self.paths) - 1 else num_walks - per * (len(self.paths) - 1)
-            if n <= 0:
-                continue
-            starts = self.start_nodes(rng, pi, n)
-            chunks.append(self.walk(rng, starts, pi))
-        return np.concatenate(chunks, axis=0)
+            counts.append(max(0, n))
+        starts = [
+            self.start_nodes(rng, pi, n) for pi, n in enumerate(counts) if n > 0
+        ]
+        path_of = np.repeat(
+            np.arange(len(self.paths), dtype=np.int64), np.asarray(counts, dtype=np.int64)
+        )
+        return self._walk_batched(rng, np.concatenate(starts), path_of)
 
 
 # --------------------------------------------------------------------- JAX

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.quick
+
 from repro.core import gnn as G
 from repro.core.hetero import HeteroGNNConfig, hetero_forward, init_hetero_params
 from repro.core import loss as loss_lib

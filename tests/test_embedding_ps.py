@@ -3,6 +3,9 @@ warm start, row-wise sparse optimizer)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.quick
 
 from repro.embedding import (
     EmbeddingConfig, SlotSpec, embed_nodes, init_params, lookup,

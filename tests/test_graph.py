@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.quick
+
 from repro.graph import (
     CSR, DistributedGraphEngine, HeteroGraph, Relation, TOY, generate,
 )

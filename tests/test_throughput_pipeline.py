@@ -1,0 +1,266 @@
+"""Throughput-overhaul tests: vectorized engine build, cross-round batch
+carry, vectorized slot padding, the prefetching trainer, and the
+config-selected Pallas aggregation path."""
+import numpy as np
+import pytest
+
+from repro.core import Graph4RecConfig, HeteroGNNConfig
+from repro.core.hetero import hetero_forward, init_hetero_params
+from repro.embedding import EmbeddingConfig
+from repro.embedding.table import _pad_slot_values_loop, pad_slot_values
+from repro.graph import DistributedGraphEngine, TOY, generate
+from repro.graph.engine import _gather_rows, _gather_rows_loop
+from repro.sampling import EgoConfig, PairConfig, PipelineConfig, SamplePipeline
+from repro.train import Graph4RecTrainer, TrainerConfig
+from repro.walk import WalkConfig
+
+pytestmark = pytest.mark.quick
+
+RELS = ("u2click2i", "i2click2u")
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(TOY, seed=0)
+
+
+class TestVectorizedEngineBuild:
+    def test_gather_rows_matches_loop(self, ds):
+        for csr in ds.graph.relations.values():
+            rows = np.arange(1, ds.graph.num_nodes, 3, dtype=np.int64)
+            a_ptr, a_idx = _gather_rows(csr.indptr, csr.indices, rows)
+            b_ptr, b_idx = _gather_rows_loop(csr.indptr, csr.indices, rows)
+            np.testing.assert_array_equal(a_ptr, b_ptr)
+            np.testing.assert_array_equal(a_idx, b_idx)
+
+    def test_gather_rows_all_empty(self):
+        indptr = np.zeros(5, dtype=np.int64)
+        indices = np.empty(0, dtype=np.int64)
+        out_ptr, out_idx = _gather_rows(indptr, indices, np.arange(4, dtype=np.int64))
+        np.testing.assert_array_equal(out_ptr, np.zeros(5, dtype=np.int64))
+        assert len(out_idx) == 0
+
+    def test_partition_build_equivalence(self, ds):
+        fast = DistributedGraphEngine(ds.graph, num_partitions=4, build="vectorized")
+        loop = DistributedGraphEngine(ds.graph, num_partitions=4, build="loop")
+        for pf, pl in zip(fast.partitions, loop.partitions):
+            assert pf.rel_rows.keys() == pl.rel_rows.keys()
+            for rel in pf.rel_rows:
+                np.testing.assert_array_equal(pf.rel_rows[rel][0], pl.rel_rows[rel][0])
+                np.testing.assert_array_equal(pf.rel_rows[rel][1], pl.rel_rows[rel][1])
+
+    def test_sampling_and_stats_equivalence(self, ds):
+        """Identical partitions + identical rng stream -> identical samples."""
+        fast = DistributedGraphEngine(ds.graph, num_partitions=4, build="vectorized")
+        loop = DistributedGraphEngine(ds.graph, num_partitions=4, build="loop")
+        nodes = np.random.default_rng(3).integers(0, ds.graph.num_nodes, 64)
+        a = fast.sample_neighbors(np.random.default_rng(7), nodes, RELS[0], 5)
+        b = loop.sample_neighbors(np.random.default_rng(7), nodes, RELS[0], 5)
+        np.testing.assert_array_equal(a, b)
+        for f in ("batches", "neighbor_requests", "cross_partition_requests"):
+            assert getattr(fast.stats, f) == getattr(loop.stats, f)
+
+
+class TestBatchCarry:
+    def _pipe(self, ds, walks_per_round, batch_pairs, ego=True):
+        eng = DistributedGraphEngine(ds.graph, num_partitions=2)
+        cfg = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+            pair=PairConfig(win_size=2),
+            ego=EgoConfig(relations=list(RELS), fanouts=[3]) if ego else None,
+            batch_pairs=batch_pairs, walks_per_round=walks_per_round,
+        )
+        return SamplePipeline(eng, cfg, seed=0)
+
+    def test_small_rounds_terminate_and_emit(self, ds):
+        # 4 walks/round yields far fewer pairs than one 100-pair batch: the
+        # seed dropped every round on the floor and looped forever; the carry
+        # must accumulate rounds and emit exactly N full batches.
+        pipe = self._pipe(ds, walks_per_round=4, batch_pairs=100)
+        batches = list(pipe.batches(3))
+        assert len(batches) == 3
+        for b in batches:
+            assert len(b.src_ids) == 100
+            assert b.src_ego.levels[0].shape[0] == 100
+
+    def test_no_pair_dropped_across_rounds(self, ds):
+        pipe = self._pipe(ds, walks_per_round=4, batch_pairs=64)
+        seen_src, seen_dst = [], []
+        orig_round = pipe._round
+
+        def recording_round():
+            for src, dst, se, de in orig_round():
+                seen_src.append(src)
+                seen_dst.append(dst)
+                yield src, dst, se, de
+
+        pipe._round = recording_round
+        batches = list(pipe.batches(4))
+        got_src = np.concatenate([b.src_ids for b in batches])
+        got_dst = np.concatenate([b.dst_ids for b in batches])
+        all_src = np.concatenate(seen_src)
+        all_dst = np.concatenate(seen_dst)
+        # every emitted pair is the next generated pair, in order: no drops
+        np.testing.assert_array_equal(got_src, all_src[: len(got_src)])
+        np.testing.assert_array_equal(got_dst, all_dst[: len(got_dst)])
+        # and fewer than one batch of generated pairs is still in flight
+        assert len(all_src) - len(got_src) < 64 + len(seen_src[-1])
+
+    def test_carried_egos_track_pairs(self, ds):
+        pipe = self._pipe(ds, walks_per_round=4, batch_pairs=48)
+        for b in pipe.batches(3):
+            np.testing.assert_array_equal(b.src_ids, b.src_ego.centers)
+            np.testing.assert_array_equal(b.dst_ids, b.dst_ego.centers)
+
+    def test_walk_only_carry(self, ds):
+        pipe = self._pipe(ds, walks_per_round=4, batch_pairs=80, ego=False)
+        batches = list(pipe.batches(2))
+        assert [len(b.src_ids) for b in batches] == [80, 80]
+        assert batches[0].src_ego is None
+
+
+class TestPadSlotValues:
+    def _ragged(self, rng, n_nodes=40, vocab=50):
+        lens = rng.integers(0, 6, n_nodes)
+        indptr = np.zeros(n_nodes + 1, dtype=np.int64)
+        np.cumsum(lens, out=indptr[1:])
+        values = rng.integers(0, vocab, int(indptr[-1]))
+        return indptr, values
+
+    def test_matches_loop_reference(self):
+        rng = np.random.default_rng(0)
+        indptr, values = self._ragged(rng)
+        ids = rng.integers(-1, 40, size=200)  # includes PAD ids
+        for max_values in (1, 3, 8):
+            a = pad_slot_values(indptr, values, ids, max_values)
+            b = _pad_slot_values_loop(indptr, values, ids, max_values)
+            np.testing.assert_array_equal(a, b)
+
+    def test_all_pad_ids(self):
+        rng = np.random.default_rng(1)
+        indptr, values = self._ragged(rng)
+        out = pad_slot_values(indptr, values, np.full(7, -1), 3)
+        assert (out == -1).all()
+
+    def test_2d_ids_flattened(self):
+        rng = np.random.default_rng(2)
+        indptr, values = self._ragged(rng)
+        ids = rng.integers(0, 40, size=(6, 5))
+        a = pad_slot_values(indptr, values, ids, 4)
+        b = _pad_slot_values_loop(indptr, values, ids, 4)
+        np.testing.assert_array_equal(a, b)
+
+
+def _toy_trainer(ds, **cfg_kw):
+    mc = Graph4RecConfig(
+        embedding=EmbeddingConfig(num_nodes=ds.graph.num_nodes, dim=16),
+        gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
+                            num_layers=1, dim=16),
+        fanouts=(3,),
+        relations=RELS,
+        loss="inbatch_softmax",
+    )
+    pc = PipelineConfig(
+        walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+        pair=PairConfig(win_size=2),
+        ego=EgoConfig(relations=list(RELS), fanouts=[3]),
+        batch_pairs=64, walks_per_round=16,
+    )
+    eng = DistributedGraphEngine(ds.graph, num_partitions=2)
+    cfg = TrainerConfig(num_steps=6, log_every=0, eval_at_end=False,
+                        eval_max_users=32, **cfg_kw)
+    return Graph4RecTrainer(ds, eng, mc, pc, cfg)
+
+
+class TestPrefetchTrainer:
+    def test_prefetch_matches_serial(self, ds):
+        """Prefetching reorders nothing: identical seeds -> identical losses."""
+        serial = _toy_trainer(ds, prefetch_batches=0, sync_every_step=True).train()
+        fast = _toy_trainer(ds, prefetch_batches=3).train()
+        assert len(serial.losses) == len(fast.losses) == 6
+        np.testing.assert_allclose(serial.losses, fast.losses, rtol=1e-5)
+        assert serial.pairs_seen == fast.pairs_seen
+
+    def test_producer_error_propagates(self, ds):
+        tr = _toy_trainer(ds, prefetch_batches=2)
+        tr.pipe_cfg = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+            pair=PairConfig(win_size=2),
+            ego=EgoConfig(relations=["nonexistent"], fanouts=[3]),
+            batch_pairs=64, walks_per_round=16,
+        )
+        with pytest.raises(KeyError):
+            tr.train()
+
+
+class TestSlotBagMode:
+    def test_bag_matches_values_exactly(self, ds):
+        """'bag' (count-matrix GEMM) side info == 'values' (padded gather)."""
+        import dataclasses
+
+        import jax
+        from repro.core import model as model_lib
+        from repro.embedding import SlotSpec
+
+        mc_values = Graph4RecConfig(
+            embedding=EmbeddingConfig(
+                num_nodes=ds.graph.num_nodes, dim=16,
+                slots=(SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 2)),
+            ),
+            gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
+                                num_layers=1, dim=16),
+            fanouts=(3,),
+            relations=RELS,
+            use_side_info=True,
+            slot_mode="values",
+        )
+        mc_bag = dataclasses.replace(mc_values, slot_mode="bag")
+        eng = DistributedGraphEngine(ds.graph, num_partitions=2)
+        pc = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+            pair=PairConfig(win_size=2),
+            ego=EgoConfig(relations=list(RELS), fanouts=[3]),
+            batch_pairs=32, walks_per_round=16,
+        )
+        batch = next(iter(SamplePipeline(eng, pc, seed=0).batches(1)))
+        params = model_lib.init_model_params(jax.random.PRNGKey(0), mc_values)
+        dev_v = model_lib.device_batch(ds.graph, batch, mc_values)
+        dev_b = model_lib.device_batch(ds.graph, batch, mc_bag)
+        assert "slot_counts" in dev_b and dev_b["src"][1] is None
+        lv, gv = jax.value_and_grad(model_lib.loss_fn)(params, mc_values, dev_v)
+        lb, gb = jax.value_and_grad(model_lib.loss_fn)(params, mc_bag, dev_b)
+        np.testing.assert_allclose(float(lv), float(lb), rtol=1e-6)
+        for k in gv:
+            np.testing.assert_allclose(
+                np.asarray(gv[k]), np.asarray(gb[k]), rtol=1e-5, atol=1e-6,
+                err_msg=k,
+            )
+
+
+class TestKernelAggrConfig:
+    def test_config_selects_kernel_path(self, ds):
+        cfg = HeteroGNNConfig(gnn_type="sage-mean", num_relations=2,
+                              num_layers=1, dim=8)
+        import jax
+
+        params = init_hetero_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        feats = [
+            np.asarray(rng.normal(size=(4, 1, 8)), np.float32),
+            np.asarray(rng.normal(size=(4, 6, 8)), np.float32),
+        ]
+        masks = [np.ones((4, 1), bool), rng.random((4, 6)) > 0.3]
+        import dataclasses
+
+        ref = hetero_forward(params, dataclasses.replace(cfg, use_kernel_aggr=False),
+                             feats, masks, [3])
+        ker = hetero_forward(params, dataclasses.replace(cfg, use_kernel_aggr=True),
+                             feats, masks, [3])
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(ker),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_trainer_config_overrides_model_config(self, ds):
+        tr = _toy_trainer(ds, use_kernel_aggr=True)
+        assert tr.model_cfg.gnn.use_kernel_aggr is True
+        tr = _toy_trainer(ds)
+        assert tr.model_cfg.gnn.use_kernel_aggr is None

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.quick
+
 from repro.graph import DistributedGraphEngine, TOY, generate
 from repro.sampling import (
     EgoConfig, PAD, PairConfig, PipelineConfig, SamplePipeline,
