@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-throughput
+.PHONY: test test-fast bench-throughput bench-step
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -10,3 +10,6 @@ test-fast:
 
 bench-throughput:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --quick
+
+bench-step:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --step

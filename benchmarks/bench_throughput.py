@@ -56,10 +56,12 @@ def pipeline_throughput(quick: bool = True, results: Dict = None) -> None:
 
     The serial arm reproduces the seed end to end: no prefetch thread, a
     device sync every step, loop-built engine partitions, per-node Python
-    slot padding and 'values' (padded gather+sum) side info. The prefetch
-    arm is the production path: background prefetch, no per-step sync,
-    vectorized engine build/padding and 'bag' side info. Each arm runs
-    twice, alternating, and the best run counts (tames CPU noise).
+    slot padding, 'values' (padded gather+sum) side info, and the dense
+    full-table grad step (sparse_updates=False). The prefetch arm is the
+    production path: background prefetch, no per-step sync, vectorized
+    engine build/padding, 'bag' side info and the sparse gather→step→scatter
+    grad step. Each arm runs twice, alternating, and the best run counts
+    (tames CPU noise).
     """
     ds = dataset("toy" if quick else "rec15")
     steps = 60 if quick else 200
@@ -71,7 +73,8 @@ def pipeline_throughput(quick: bool = True, results: Dict = None) -> None:
     for name, kw in arms:
         tr_serial = trainer(
             ds, steps=steps, prefetch_batches=0, sync_every_step=True,
-            eval_at_end=False, engine_build="loop", slot_mode="values", **kw,
+            eval_at_end=False, engine_build="loop", slot_mode="values",
+            sparse_updates=False, **kw,
         )
         tr_fast = trainer(
             ds, steps=steps, prefetch_batches=3, sync_every_step=False,
@@ -129,6 +132,131 @@ def engine_build(quick: bool = True, results: Dict = None) -> None:
         }
 
 
+def sparse_step_bench(quick: bool = True, results: Dict = None) -> None:
+    """Sparse gather→step→scatter vs dense full-table grad step, by rows.
+
+    Both arms run the production code paths (embedding.table gather/scatter +
+    embedding.optimizer row-wise AdaGrad vs train.optimizer.rowwise_adagrad
+    over dense grads) on the same batch stream; the 1M-row point is always
+    measured — it is the regression baseline for the O(batch)-vs-O(N) claim
+    (sparse steps/sec must stay flat in N, dense decays ~linearly).
+    """
+    import numpy as np
+
+    from repro.embedding import (
+        gather_rows, lookup, remap_ids, rowwise_adagrad_init,
+        rowwise_adagrad_scatter_update, unique_pad_ids,
+    )
+    from repro.train import optimizer as opt_lib
+
+    dim, B, bucket, lr = 32, 1024, 2048, 0.5
+    sizes = (10_000, 100_000, 1_000_000)
+    reps, iters = (3, 10) if quick else (5, 20)
+
+    def dense_step_fn():
+        opt = opt_lib.rowwise_adagrad(lr)
+
+        def step(table, accum, ids):
+            def loss_of(t):
+                return (lookup(t, ids) ** 2).mean()
+
+            g = jax.grad(loss_of)(table)
+            upd, accum = opt.update({"t": g}, {"t": accum})
+            return table + upd["t"], accum["t"]
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    def sparse_step_fn():
+        def step(table, accum, uniq, local):
+            sub = gather_rows(table, uniq)
+
+            def loss_of(s):
+                return (lookup(s, local) ** 2).mean()
+
+            g = jax.grad(loss_of)(sub)
+            from repro.embedding import RowAdagradState
+
+            new_p, st = rowwise_adagrad_scatter_update(
+                {"t": table}, {"t": g}, {"t": uniq},
+                RowAdagradState(accum={"t": accum}), lr=lr,
+            )
+            return new_p["t"], st.accum["t"]
+
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    step_results: Dict[str, Dict[str, float]] = {}
+    for N in sizes:
+        rng = np.random.default_rng(0)
+        id_pool = [rng.integers(0, N, size=B) for _ in range(8)]
+        times: Dict[str, float] = {}
+
+        dense = dense_step_fn()
+        table = jnp.asarray(rng.normal(size=(N, dim)).astype(np.float32))
+        accum = jnp.full((N, 1), 0.1, jnp.float32)
+        ids_dev = [jnp.asarray(i) for i in id_pool]
+        table, accum = dense(table, accum, ids_dev[0])
+        jax.block_until_ready(table)
+        best = 1e9
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for it in range(iters):
+                table, accum = dense(table, accum, ids_dev[it % 8])
+            jax.block_until_ready(table)
+            best = min(best, (time.perf_counter() - t0) / iters)
+        times["dense"] = best
+        del table, accum
+
+        sparse = sparse_step_fn()
+        table = jnp.asarray(rng.normal(size=(N, dim)).astype(np.float32))
+        accum = jnp.full((N, 1), 0.1, jnp.float32)
+        # host-side dedup+remap is part of the sparse path: keep it inside
+        # the timed loop
+        table, accum = sparse(
+            table, accum,
+            jnp.asarray(unique_pad_ids([id_pool[0]], bucket=bucket)),
+            jnp.asarray(remap_ids(unique_pad_ids([id_pool[0]], bucket=bucket), id_pool[0])),
+        )
+        jax.block_until_ready(table)
+        best = 1e9
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for it in range(iters):
+                ids = id_pool[it % 8]
+                uniq = unique_pad_ids([ids], bucket=bucket)
+                local = jnp.asarray(remap_ids(uniq, ids))
+                table, accum = sparse(table, accum, jnp.asarray(uniq), local)
+            jax.block_until_ready(table)
+            best = min(best, (time.perf_counter() - t0) / iters)
+        times["sparse"] = best
+        del table, accum
+
+        speedup = times["dense"] / times["sparse"]
+        for mode in ("dense", "sparse"):
+            emit(
+                f"grad_step/N{N}/{mode}", times[mode] * 1e6,
+                f"steps_per_sec={1.0 / times[mode]:.1f}",
+            )
+        emit(f"grad_step/N{N}/speedup", 0.0, f"speedup={speedup:.2f}x")
+        step_results[f"N{N}"] = {
+            "dense_us": round(times["dense"] * 1e6, 1),
+            "sparse_us": round(times["sparse"] * 1e6, 1),
+            "steps_per_sec_dense": round(1.0 / times["dense"], 1),
+            "steps_per_sec_sparse": round(1.0 / times["sparse"], 1),
+            "speedup": round(speedup, 3),
+        }
+    flat = (
+        step_results[f"N{sizes[-1]}"]["sparse_us"]
+        / step_results[f"N{sizes[0]}"]["sparse_us"]
+    )
+    emit("grad_step/sparse_flat_ratio", 0.0, f"t(1M)/t(10k)={flat:.2f}x")
+    if results is not None:
+        step_results["sparse_flat_ratio_1M_vs_10k"] = round(flat, 3)
+        # self-describing: --step merges into an existing JSON whose
+        # top-level "quick" flag reflects the last full run, not this arm
+        step_results["quick"] = quick
+        results["grad_step"] = step_results
+
+
 def kernel_micro(quick: bool = True, results: Dict = None) -> None:
     from repro.kernels import ops
 
@@ -165,7 +293,22 @@ def run(quick: bool = True) -> Dict:
     results: Dict = {"quick": quick}
     engine_build(quick, results)
     pipeline_throughput(quick, results)
+    sparse_step_bench(quick, results)
     kernel_micro(quick, results)
+    with open(_JSON_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results
+
+
+def run_step_only(quick: bool = True) -> Dict:
+    """`make bench-step`: just the grad-step arm, merged into the JSON."""
+    try:
+        with open(_JSON_PATH) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        results = {"quick": quick}
+    sparse_step_bench(quick, results)
     with open(_JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -178,6 +321,11 @@ if __name__ == "__main__":
     grp.add_argument("--quick", action="store_true", default=True,
                      help="toy dataset, short runs (default)")
     grp.add_argument("--full", action="store_true", help="larger synthetic dataset")
+    ap.add_argument("--step", action="store_true",
+                    help="run only the sparse-vs-dense grad-step arm")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=not args.full)
+    if args.step:
+        run_step_only(quick=not args.full)
+    else:
+        run(quick=not args.full)

@@ -43,6 +43,7 @@ def trainer(
     eval_at_end: bool = True,
     engine_build: str = "vectorized",
     slot_mode: str = "bag",
+    sparse_updates: bool = True,
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -74,6 +75,7 @@ def trainer(
                       sparse_lr=1.0, seed=seed,
                       prefetch_batches=prefetch_batches,
                       sync_every_step=sync_every_step,
+                      sparse_updates=sparse_updates,
                       eval_at_end=eval_at_end),
     )
 

@@ -247,6 +247,131 @@ def device_batch(
     return out
 
 
+# ------------------------------------------- sparse (gather→step→scatter) path
+def sparse_device_batch(
+    graph,
+    batch: TrainBatch,
+    cfg: Graph4RecConfig,
+    buckets: Optional[Dict[str, int]] = None,
+) -> Dict:
+    """``device_batch`` under the gather→step→scatter contract.
+
+    Same structure as ``device_batch`` — so ``loss_fn`` runs unchanged — but
+    every id is remapped onto rows of a per-table gathered sub-table, and
+    ``out["uniq"]`` carries each table's global touched ids (PAD-padded in
+    front to a power-of-two bucket; see ``embedding.table.unique_pad_ids``).
+    In 'bag' slot mode ``out["slot_counts"]`` becomes a per-batch
+    (node_bucket, value_bucket) sub count matrix — the touched rows/columns
+    of the full (num_nodes, vocab) matrix — instead of the device-resident
+    full one, so the jitted step never touches O(num_nodes) state.
+
+    ``buckets`` (table key -> bucket width) is mutated in place and should be
+    persisted by the caller across batches so jit shapes stay stable.
+    """
+    if buckets is None:
+        buckets = {}
+    out: Dict = {}
+    vm = _values_mode(cfg)
+    bag = cfg.use_side_info and cfg.slot_mode == "bag"
+
+    if cfg.is_walk_based:
+        parts: Dict[str, np.ndarray] = {"src": batch.src_ids, "dst": batch.dst_ids}
+        if batch.neg_ids is not None:
+            parts["neg"] = batch.neg_ids.reshape(-1)
+        id_arrays = list(parts.values())
+    else:
+        parts = {"src": batch.src_ego, "dst": batch.dst_ego}
+        if batch.neg_ego is not None:
+            parts["neg"] = batch.neg_ego
+        id_arrays = [l for ego in parts.values() for l in ego.levels]
+
+    uniq_node = emb.unique_pad_ids(id_arrays, buckets.get("node", 0))
+    buckets["node"] = len(uniq_node)
+    uniq: Dict[str, np.ndarray] = {"node": uniq_node}
+
+    # Per-slot global value lists. 'values': the padded per-id lists that the
+    # batch itself consumes. 'bag': each touched node's max_values-truncated
+    # value set — exactly the nonzero columns of its count-matrix row.
+    slot_globals: Dict[str, List[np.ndarray]] = (
+        {s.name: [] for s in cfg.embedding.slots} if (vm or bag) else {}
+    )
+    part_slots: Dict[str, object] = {}
+    if vm:
+        for pname, p in parts.items():
+            if cfg.is_walk_based:
+                s = _slots_for_ids(graph, np.asarray(p).reshape(-1), cfg.embedding.slots)
+                part_slots[pname] = s
+                for sn, arr in s.items():
+                    slot_globals[sn].append(arr)
+            else:
+                per_level = [
+                    _slots_for_ids(graph, l, cfg.embedding.slots) for l in p.levels
+                ]
+                part_slots[pname] = per_level
+                for lv in per_level:
+                    for sn, arr in lv.items():
+                        slot_globals[sn].append(arr)
+    if bag:
+        real_nodes = uniq_node[uniq_node >= 0]
+        for spec in cfg.embedding.slots:
+            sf = graph.slots[spec.name]
+            slot_globals[spec.name].append(
+                emb.pad_slot_values(
+                    sf.indptr, sf.values, real_nodes, spec.max_values, pad_id=PAD
+                )
+            )
+    for spec in cfg.embedding.slots:
+        if not slot_globals:
+            break
+        key = f"slot:{spec.name}"
+        uniq[key] = emb.unique_pad_ids(slot_globals[spec.name], buckets.get(key, 0))
+        buckets[key] = len(uniq[key])
+
+    if cfg.is_walk_based:
+        for pname, ids in parts.items():
+            local = emb.remap_ids(uniq_node, ids)
+            slots = None
+            if vm:
+                slots = {
+                    sn: jnp.asarray(emb.remap_ids(uniq[f"slot:{sn}"], arr))
+                    for sn, arr in part_slots[pname].items()
+                }
+            out[pname] = (jnp.asarray(local), slots)
+    else:
+        for pname, ego in parts.items():
+            levels = [jnp.asarray(emb.remap_ids(uniq_node, l)) for l in ego.levels]
+            slots = None
+            if vm:
+                slots = [
+                    {
+                        sn: jnp.asarray(emb.remap_ids(uniq[f"slot:{sn}"], arr))
+                        for sn, arr in lv.items()
+                    }
+                    for lv in part_slots[pname]
+                ]
+            out[pname] = (levels, slots)
+
+    if bag:
+        out["slot_counts"] = {}
+        n_bucket = len(uniq_node)
+        offset = n_bucket - int((uniq_node >= 0).sum())
+        for spec in cfg.embedding.slots:
+            u = uniq[f"slot:{spec.name}"]
+            vals = slot_globals[spec.name][0]  # (n_real, max_values) global ids
+            cmat = np.zeros((n_bucket, len(u)), np.float32)
+            valid = vals >= 0
+            if valid.any():
+                rows = offset + np.broadcast_to(
+                    np.arange(vals.shape[0])[:, None], vals.shape
+                )
+                cols = emb.remap_ids(u, vals)
+                np.add.at(cmat, (rows[valid], cols[valid]), 1.0)
+            out["slot_counts"][spec.name] = jnp.asarray(cmat)
+
+    out["uniq"] = {k: jnp.asarray(v) for k, v in uniq.items()}
+    return out
+
+
 # ------------------------------------------------------------- full inference
 def encode_all_nodes(
     params: Params,

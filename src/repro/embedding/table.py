@@ -2,15 +2,22 @@
 
 The paper's parameter server is a key-value store of sparse embeddings:
 workers *pull* rows at step start and *push* gradients for asynchronous
-updates. The SPMD TPU equivalent partitions the table's vocab axis across the
-``model`` mesh axis:
+updates. Two SPMD equivalents coexist here:
 
-- **pull**  = ``ps_lookup`` under ``shard_map``: every shard gathers the rows
-  it owns (masked local take) and a ``psum`` over ``model`` assembles full
-  rows — one all-reduce instead of RPC.
-- **push**  = the transpose of pull under autodiff: the psum's cotangent is
-  an identity broadcast, and the masked take transposes to a scatter-add into
-  the owning shard only. No code needed — JAX differentiates ``ps_lookup``.
+- **Sharded pull/push**: the table's vocab axis is partitioned across the
+  ``model`` mesh axis. ``ps_lookup`` under ``shard_map`` is the pull (masked
+  local take + ``psum``), and its autodiff transpose is the push (scatter-add
+  into the owning shard). No code needed — JAX differentiates ``ps_lookup``.
+- **Gather→step→scatter** (the training hot path): per batch, the trainer
+  deduplicates the touched ids host-side (``unique_pad_ids`` — PAD-padded in
+  front to a power-of-two bucket so jit shapes stay stable), remaps the
+  batch's ids onto rows of the gathered sub-table (``remap_ids``), pulls only
+  those rows (``gather_rows``), differentiates w.r.t. the sub-table, and
+  pushes the row-wise-AdaGrad-updated rows back with ``scatter_rows`` under
+  buffer donation. Every step is O(unique ids), never O(num_nodes) — the
+  faithful port of the PS's sparse pull/push (see
+  ``embedding/optimizer.py`` for the update rule and
+  ``train/trainer.py`` for the jitted step).
 
 Lazy initialization is replaced by pre-allocated sharded tables (TPU memory
 is statically planned); an optional ``init_mask`` preserves the "row never
@@ -18,7 +25,9 @@ seen" semantics for cold-start experiments.
 
 Side information (§3.5): configurable sparse slots, each with multiple
 values per node (texts/tags), embedded and **summed** with the ID embedding,
-exactly as the paper trains side info.
+exactly as the paper trains side info. Slot tables participate in the same
+gather→step→scatter contract: the unique slot-value ids of a batch are
+bucketed and remapped exactly like node ids.
 """
 from __future__ import annotations
 
@@ -91,6 +100,71 @@ def lookup(table: jnp.ndarray, ids: jnp.ndarray, pad_id: int = -1) -> jnp.ndarra
     safe = jnp.where(ids >= 0, ids, 0)
     rows = jnp.take(table, safe, axis=0)
     return jnp.where((ids >= 0)[..., None], rows, 0.0)
+
+
+# ------------------------------------------------- unique-id (sparse) path
+def unique_pad_ids(
+    id_arrays: Sequence[np.ndarray], bucket: int = 0, min_bucket: int = 8
+) -> np.ndarray:
+    """Deduplicated touched ids, PAD-padded *in front* to a stable bucket.
+
+    Host-side prologue of the gather→step→scatter contract: the returned
+    array holds ``width - n`` leading PADs (-1) followed by the ``n`` unique
+    non-PAD ids in ascending order. ``width`` is ``max(min_bucket, bucket)``
+    doubled until it fits, so a caller that persists the width across batches
+    recompiles the jitted step at most O(log n) times and then shapes are
+    stable. PADs lead (rather than trail) so scatter consumers that clamp
+    PAD to row 0 perform their benign no-op writes *before* row 0's real
+    update (see kernels/row_adagrad.py).
+    """
+    arrays = [np.asarray(a).reshape(-1) for a in id_arrays]
+    flat = np.concatenate(arrays) if arrays else np.empty(0, np.int64)
+    real = np.unique(flat)
+    real = real[real >= 0]
+    width = max(int(min_bucket), int(bucket))
+    while width < len(real):
+        width *= 2
+    out = np.full(width, -1, dtype=np.int64)
+    if len(real):
+        out[width - len(real):] = real
+    return out
+
+
+def remap_ids(uniq: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Global ids -> row indices into ``gather_rows(table, uniq)``.
+
+    Every non-PAD id must be present in ``uniq`` (guaranteed when ``uniq``
+    came from ``unique_pad_ids`` over arrays that include ``ids``); PAD stays
+    PAD so downstream masking is unchanged.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    real = uniq[uniq >= 0]
+    if len(real) == 0:
+        return np.full(ids.shape, -1, dtype=np.int64)
+    offset = len(uniq) - len(real)
+    loc = np.searchsorted(real, np.clip(ids, real[0], real[-1]))
+    return np.where(ids >= 0, loc + offset, -1)
+
+
+def gather_rows(table: jnp.ndarray, uniq: jnp.ndarray) -> jnp.ndarray:
+    """Pull the touched rows: (bucket, dim). PAD slots clamp to row 0; their
+    contents are never referenced by remapped ids and their updates are
+    dropped by ``scatter_rows``."""
+    return jnp.take(table, jnp.maximum(uniq, 0), axis=0)
+
+
+def scatter_rows(
+    table: jnp.ndarray, uniq: jnp.ndarray, rows: jnp.ndarray
+) -> jnp.ndarray:
+    """Push updated rows back: ``table[uniq] = rows`` with PAD slots dropped.
+
+    PAD ids are remapped to ``num_rows`` (one past the end) because negative
+    scatter indices wrap in JAX; ``mode="drop"`` then discards them. Under
+    buffer donation this lowers to an in-place row write — O(bucket), not
+    O(num_rows).
+    """
+    idx = jnp.where(uniq >= 0, uniq, table.shape[0])
+    return table.at[idx].set(rows, mode="drop")
 
 
 def slot_count_matrix(

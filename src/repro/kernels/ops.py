@@ -18,11 +18,32 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.inbatch_loss import inbatch_loss_rows_pallas
+from repro.kernels.row_adagrad import row_adagrad_scatter_pallas
 from repro.kernels.seg_aggr import seg_aggr_pallas
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------- row adagrad
+def rowwise_adagrad_scatter(
+    table: jnp.ndarray,
+    accum: jnp.ndarray,
+    ids: jnp.ndarray,
+    grads: jnp.ndarray,
+    lr: float = 0.1,
+    eps: float = 1e-8,
+):
+    """Fused gather/row-wise-AdaGrad/scatter over the touched rows.
+
+    ``ids`` follows the unique-bucket layout (PADs first; see
+    embedding.table.unique_pad_ids). Called from inside the trainer's jitted
+    sparse step, so no jit wrapper here.
+    """
+    return row_adagrad_scatter_pallas(
+        table, accum, ids, grads, lr=lr, eps=eps, interpret=_interpret()
+    )
 
 
 # ------------------------------------------------------------------ seg_aggr

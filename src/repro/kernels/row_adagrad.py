@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused gather-rows / row-wise AdaGrad / scatter-rows.
+
+The sparse training step's optimizer tail is three row-indexed passes in XLA
+(gather param+accum rows, apply the row-wise rule, scatter both back). This
+kernel fuses them into one pass over the touched rows: grid step i reads the
+scalar-prefetched ``ids[i]``, whose value drives the BlockSpec index maps so
+the (1, dim) parameter row and (1, 1) accumulator row stream through VMEM,
+the VPU applies AdaGrad against the matching gradient row, and input/output
+aliasing writes the result back onto the same rows in place — no
+O(num_rows) traffic and no separate gather/scatter kernels.
+
+PAD handling: PAD slots (id < 0) clamp to row 0 and write the row back
+*unchanged*. ``embedding.table.unique_pad_ids`` orders PADs first, so under
+the sequential TPU grid every no-op PAD write of row 0 lands before row 0's
+real update (row 0 is the only row two grid steps can touch; real ids are
+distinct by construction) — the final table state is exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _row_adagrad_kernel(ids_ref, g_ref, t_ref, a_ref, ot_ref, oa_ref, *, lr, eps):
+    i = pl.program_id(0)
+    valid = ids_ref[i] >= 0
+    g = g_ref[...]  # (1, D)
+    row = t_ref[...]  # (1, D)
+    acc = a_ref[...]  # (1, 1)
+    new_acc = acc + jnp.mean(g * g, axis=-1, keepdims=True)
+    new_row = row - lr * g / (jnp.sqrt(new_acc) + eps)
+    ot_ref[...] = jnp.where(valid, new_row, row)
+    oa_ref[...] = jnp.where(valid, new_acc, acc)
+
+
+def row_adagrad_scatter_pallas(
+    table: jnp.ndarray,  # (N, D)
+    accum: jnp.ndarray,  # (N, 1)
+    ids: jnp.ndarray,  # (bucket,) int; PADs (-1) first, then distinct rows
+    grads: jnp.ndarray,  # (bucket, D) grads w.r.t. the gathered rows
+    lr: float = 0.1,
+    eps: float = 1e-8,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused ``accum[ids] += mean(g**2); table[ids] -= lr*g/sqrt(accum[ids])``.
+
+    Returns the updated (table, accum). Rows not named in ``ids`` pass
+    through untouched (aliasing), so callers treat this exactly like the
+    XLA gather/update/scatter sequence it replaces.
+    """
+    N, D = table.shape
+    bucket = ids.shape[0]
+    ids = ids.astype(jnp.int32)
+
+    def _row(i, ids_ref):  # PAD clamps to row 0; the kernel masks its write
+        return (jnp.maximum(ids_ref[i], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bucket,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0)),  # grads
+            pl.BlockSpec((1, D), _row),  # table rows
+            pl.BlockSpec((1, 1), _row),  # accum rows
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), _row),
+            pl.BlockSpec((1, 1), _row),
+        ],
+    )
+    new_table, new_accum = pl.pallas_call(
+        functools.partial(_row_adagrad_kernel, lr=lr, eps=eps),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), table.dtype),
+            jax.ShapeDtypeStruct((N, 1), accum.dtype),
+        ],
+        # operand indices include the scalar-prefetch arg: 2=table, 3=accum
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(ids, grads, table, accum)
+    return new_table, new_accum

@@ -55,6 +55,37 @@ def adagrad(lr: float, eps: float = 1e-8, init_accum: float = 0.1) -> Optimizer:
     return Optimizer(init, update)
 
 
+def rowwise_adagrad(lr: float, eps: float = 1e-8, init_accum: float = 0.1) -> Optimizer:
+    """PS row-wise AdaGrad, dense application: one (rows, 1) accumulator per
+    table, accumulating the per-row mean of squared grads.
+
+    This is the optax-style twin of
+    ``embedding.optimizer.rowwise_adagrad_scatter_update``: untouched rows
+    have zero grads (gather cotangent), so updating every row here is
+    mathematically the scatter update at O(num_rows) cost. The trainer's
+    ``sparse_updates=False`` fallback routes embedding tables through this so
+    the two paths stay provably equivalent. Leaves must be >= 1-D (rows
+    first); intended for the ``emb/*`` side of the sparse/dense ``masked``
+    split only.
+    """
+
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.full((p.shape[0], 1), init_accum, p.dtype), params
+        )
+
+    def update(grads, state, params=None):
+        new_acc = jax.tree_util.tree_map(
+            lambda a, g: a + jnp.mean(g * g, axis=-1, keepdims=True), state, grads
+        )
+        upd = jax.tree_util.tree_map(
+            lambda g, a: -lr * g / (jnp.sqrt(a) + eps), grads, new_acc
+        )
+        return upd, new_acc
+
+    return Optimizer(init, update)
+
+
 class AdamState(NamedTuple):
     step: jnp.ndarray
     mu: Any

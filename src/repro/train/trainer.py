@@ -8,8 +8,20 @@ RQ benchmark.
 Throughput design: host-side sampling + device-batch conversion run in a
 bounded background prefetch thread (``prefetch_batches`` deep), overlapping
 with the jitted grad step, and the loop never forces a device sync per step
-(losses stay on device until the end; set ``sync_every_step=True`` for the
-strictly serial sample->sync->step loop, e.g. as a benchmark baseline).
+(losses stay on device until the end, drained in windows so long runs don't
+pin unbounded device buffers; set ``sync_every_step=True`` for the strictly
+serial sample->sync->step loop, e.g. as a benchmark baseline).
+
+Sparse updates (``sparse_updates=True``, the default — the paper's PS
+pull/push, §3.6): the prefetch thread deduplicates each batch's touched ids
+per embedding table and remaps the batch onto gathered sub-tables
+(core/model.py:sparse_device_batch); the jitted step differentiates w.r.t.
+the gathered rows only, applies row-wise AdaGrad to them, and scatters the
+updated rows back into the donated tables — O(unique ids) per step instead
+of the dense path's O(num_nodes). ``sparse_updates=False`` keeps the dense
+full-table grad step (same row-wise AdaGrad rule via
+train.optimizer.rowwise_adagrad, so the two paths are numerically
+equivalent).
 """
 from __future__ import annotations
 
@@ -25,6 +37,8 @@ import numpy as np
 
 from repro.core import model as model_lib
 from repro.core.recall import evaluate_recall
+from repro.embedding import optimizer as emb_opt
+from repro.embedding import table as emb
 from repro.graph.generator import RecsysDataset
 from repro.sampling.pipeline import PipelineConfig, SamplePipeline
 from repro.train import optimizer as opt_lib
@@ -53,6 +67,20 @@ class TrainerConfig:
     # Route GNN aggregation through the Pallas seg_aggr kernel. None leaves
     # the model config (HeteroGNNConfig.use_kernel_aggr) untouched.
     use_kernel_aggr: Optional[bool] = None
+    # Gather→step→scatter training (O(unique ids) per step). False falls back
+    # to dense full-table grads + row-wise AdaGrad over every row (O(N)).
+    sparse_updates: bool = True
+    # Initial unique-id bucket width per table (0 = start at 8). Buckets grow
+    # to the next power of two on overflow (one jit recompile per width).
+    unique_bucket: int = 0
+    # Row-wise AdaGrad accumulator init (shared by both update paths).
+    adagrad_init_accum: float = 0.1
+    # Route the row-wise AdaGrad gather/apply/scatter through the fused
+    # Pallas kernel (kernels/row_adagrad.py) instead of XLA gather+scatter.
+    use_kernel_rowopt: bool = False
+    # Drain completed on-device losses to host floats every this many steps
+    # (keeps only the in-flight tail on device). 0 defers to the end of run.
+    loss_fetch_every: int = 64
 
 
 @dataclasses.dataclass
@@ -160,19 +188,44 @@ class Graph4RecTrainer:
         self.model_cfg = model_cfg
         self.pipe_cfg = pipe_cfg
         self.cfg = cfg
+        # Both paths step embedding tables with the same row-wise AdaGrad
+        # rule; dense applies it to every row, sparse to the gathered rows.
         self.opt = opt_lib.masked(
-            opt_lib.adagrad(cfg.sparse_lr),
+            opt_lib.rowwise_adagrad(
+                cfg.sparse_lr, init_accum=cfg.adagrad_init_accum
+            ),
             opt_lib.adam(cfg.dense_lr),
             select_a=lambda k: k.startswith("emb/"),
         )
+        self._dense_opt = opt_lib.adam(cfg.dense_lr)
+        # Per-table unique-id bucket widths; grown (and persisted) by
+        # sparse_device_batch so the jitted sparse step keeps stable shapes.
+        self._buckets: Dict[str, int] = {}
+        if cfg.unique_bucket:
+            self._buckets["node"] = cfg.unique_bucket
+            for slot in model_cfg.embedding.slots:
+                self._buckets[f"slot:{slot.name}"] = cfg.unique_bucket
         # 'bag' side info: one count matrix per slot, built once and shared
-        # by every batch (see embedding/table.py:embed_nodes_bag).
+        # by every batch (see embedding/table.py:embed_nodes_bag). The sparse
+        # path instead ships a per-batch sub count matrix and never builds
+        # the O(num_nodes x vocab) one.
         self._slot_counts = (
             model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
-            if self.model_cfg.use_side_info and self.model_cfg.slot_mode == "bag"
+            if (
+                self.model_cfg.use_side_info
+                and self.model_cfg.slot_mode == "bag"
+                and not cfg.sparse_updates
+            )
             else None
         )
         self._grad_step = jax.jit(self._make_grad_step())
+        self._sparse_step = jax.jit(
+            self._make_sparse_step(), donate_argnums=(0, 1)
+        )
+        self._train_pairs = np.concatenate(
+            [np.stack([u, i], 1) for (u, i) in dataset.train_edges.values()],
+            axis=0,
+        )
 
     def _make_grad_step(self):
         mc = self.model_cfg
@@ -184,6 +237,58 @@ class Graph4RecTrainer:
             return params, opt_state, loss
 
         return step
+
+    def _make_sparse_step(self):
+        """The gather→compute→scatter step (jitted with donated buffers).
+
+        ``batch`` arrives id-remapped from ``sparse_device_batch``: its
+        ``uniq`` entry names each table's touched global rows, and every id
+        in the model inputs indexes the gathered sub-table. Gradients are
+        taken w.r.t. the (bucket, dim) sub-tables only, so nothing in the
+        step — forward, backward, or optimizer — is O(num_nodes).
+        """
+        mc = self.model_cfg
+        cfg = self.cfg
+        dense_opt = self._dense_opt
+
+        def step(params, opt_state, batch):
+            uniq = {f"emb/{k}": v for k, v in batch["uniq"].items()}
+            model_batch = {k: v for k, v in batch.items() if k != "uniq"}
+            sparse_p, dense_p = model_lib.sparse_dense_split(params)
+            row_state, dense_state = opt_state
+            # Tables the batch never touches (e.g. slot tables with side info
+            # disabled) pass straight through — no gather, no grads.
+            touched = {k: v for k, v in sparse_p.items() if k in uniq}
+            sub = {k: emb.gather_rows(v, uniq[k]) for k, v in touched.items()}
+
+            def loss_of(sub_tables, dense):
+                return model_lib.loss_fn({**dense, **sub_tables}, mc, model_batch)
+
+            loss, (g_sub, g_dense) = jax.value_and_grad(loss_of, argnums=(0, 1))(
+                sub, dense_p
+            )
+            d_updates, dense_state = dense_opt.update(g_dense, dense_state, dense_p)
+            dense_p = opt_lib.apply_updates(dense_p, d_updates)
+            new_touched, touched_state = emb_opt.rowwise_adagrad_scatter_update(
+                touched, g_sub, uniq, row_state,
+                lr=cfg.sparse_lr, eps=1e-8, use_kernel=cfg.use_kernel_rowopt,
+            )
+            row_state = emb_opt.RowAdagradState(
+                accum={**row_state.accum, **touched_state.accum}
+            )
+            params = {**dense_p, **sparse_p, **new_touched}
+            return params, (row_state, dense_state), loss
+
+        return step
+
+    def _init_sparse_opt_state(self, params: Dict):
+        sparse_p, dense_p = model_lib.sparse_dense_split(params)
+        return (
+            emb_opt.rowwise_adagrad_init(
+                sparse_p, init_accum=self.cfg.adagrad_init_accum
+            ),
+            self._dense_opt.init(dense_p),
+        )
 
     def init_params(self, key: Optional[jax.Array] = None) -> Dict:
         key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
@@ -197,12 +302,9 @@ class Graph4RecTrainer:
         )
         user_emb = all_emb[: ds.num_users]
         item_emb = all_emb[ds.num_users : ds.num_users + ds.num_items]
-        train_pairs = np.concatenate(
-            [np.stack([u, i], 1) for (u, i) in ds.train_edges.values()], axis=0
-        )
         eval_pairs = ds.val_pairs if split == "val" else ds.test_pairs
         return evaluate_recall(
-            user_emb, item_emb, train_pairs, eval_pairs,
+            user_emb, item_emb, self._train_pairs, eval_pairs,
             top_k=self.cfg.eval_top_k, max_users=self.cfg.eval_max_users,
         )
 
@@ -210,20 +312,40 @@ class Graph4RecTrainer:
         self, pipeline: SamplePipeline, num: int
     ) -> Iterator[Tuple[Dict, int]]:
         """Host pipeline -> (device batch, num pairs); runs inside the
-        prefetch thread so jnp conversion overlaps device compute too."""
+        prefetch thread so jnp conversion — and, on the sparse path, the
+        unique-id dedup + remap — overlaps device compute."""
         for batch in pipeline.batches(num):
-            dev = model_lib.device_batch(
-                self.dataset.graph, batch, self.model_cfg,
-                slot_counts=self._slot_counts,
-            )
+            if self.cfg.sparse_updates:
+                dev = model_lib.sparse_device_batch(
+                    self.dataset.graph, batch, self.model_cfg,
+                    buckets=self._buckets,
+                )
+            else:
+                dev = model_lib.device_batch(
+                    self.dataset.graph, batch, self.model_cfg,
+                    slot_counts=self._slot_counts,
+                )
             yield dev, len(batch.src_ids)
 
     def train(self, params: Optional[Dict] = None) -> TrainResult:
         cfg = self.cfg
         params = params if params is not None else self.init_params()
-        opt_state = self.opt.init(params)
+        if cfg.sparse_updates:
+            # The sparse step donates its param buffers; copy once so a
+            # caller-held pytree (e.g. for a later cold-start eval) survives.
+            params = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), params)
+            opt_state = self._init_sparse_opt_state(params)
+            step_fn = self._sparse_step
+        else:
+            opt_state = self.opt.init(params)
+            step_fn = self._grad_step
         pipeline = SamplePipeline(self.engine, self.pipe_cfg, seed=cfg.seed)
-        loss_hist: List[jax.Array] = []
+        loss_hist: List[jax.Array] = []  # in-flight on-device tail
+        losses: List[float] = []  # drained, completed losses
+        # Keep at least the prefetch window on device before draining; the
+        # drained prefix is steps behind the last dispatch, so device_get
+        # barely blocks.
+        drain_tail = max(1, cfg.prefetch_batches + 1)
         evals: List[Dict[str, float]] = []
         pairs_seen = 0
         batch_iter: Iterator = self._device_batches(pipeline, cfg.num_steps)
@@ -234,11 +356,17 @@ class Graph4RecTrainer:
         t0 = time.perf_counter()
         try:
             for step, (dev, npairs) in enumerate(batch_iter):
-                params, opt_state, loss = self._grad_step(params, opt_state, dev)
+                params, opt_state, loss = step_fn(params, opt_state, dev)
                 loss_hist.append(loss)
                 pairs_seen += npairs
                 if cfg.sync_every_step:
                     float(loss)
+                if (
+                    cfg.loss_fetch_every
+                    and len(loss_hist) >= cfg.loss_fetch_every + drain_tail
+                ):
+                    done, loss_hist = loss_hist[:-drain_tail], loss_hist[-drain_tail:]
+                    losses.extend(float(l) for l in jax.device_get(done))
                 if cfg.log_every and (step + 1) % cfg.log_every == 0:
                     log.info("step %d loss %.4f", step + 1, float(loss))
                 if cfg.eval_every and (step + 1) % cfg.eval_every == 0:
@@ -249,7 +377,7 @@ class Graph4RecTrainer:
         if loss_hist:
             jax.block_until_ready(loss_hist[-1])
         wall = time.perf_counter() - t0
-        losses = [float(l) for l in loss_hist]
+        losses.extend(float(l) for l in jax.device_get(loss_hist))
         if cfg.eval_at_end:
             evals.append(self.evaluate(params))
         return TrainResult(
