@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-throughput bench-step
+.PHONY: test test-fast bench-throughput bench-step bench-engine
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -13,3 +13,6 @@ bench-throughput:
 
 bench-step:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --step
+
+bench-engine:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --engine

@@ -44,6 +44,8 @@ def trainer(
     engine_build: str = "vectorized",
     slot_mode: str = "bag",
     sparse_updates: bool = True,
+    engine_backend: str = "inproc",
+    num_engine_workers: int = 2,
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -68,7 +70,15 @@ def trainer(
         ego=None if walk_based else EgoConfig(relations=list(RELS), fanouts=[4, 3]),
         order=order, batch_pairs=batch_pairs, walks_per_round=64,
     )
-    eng = DistributedGraphEngine(g, num_partitions=num_partitions, build=engine_build)
+    # mp backend: pass the bare graph so adjacency is partitioned once,
+    # straight into shared memory (no unused in-process partition copies)
+    eng = (
+        g
+        if engine_backend == "mp"
+        else DistributedGraphEngine(
+            g, num_partitions=num_partitions, build=engine_build
+        )
+    )
     return Graph4RecTrainer(
         ds, eng, mc, pc,
         TrainerConfig(num_steps=steps, log_every=0, eval_max_users=128,
@@ -76,7 +86,10 @@ def trainer(
                       prefetch_batches=prefetch_batches,
                       sync_every_step=sync_every_step,
                       sparse_updates=sparse_updates,
-                      eval_at_end=eval_at_end),
+                      eval_at_end=eval_at_end,
+                      engine_backend=engine_backend,
+                      num_engine_workers=num_engine_workers,
+                      num_engine_partitions=num_partitions),
     )
 
 

@@ -40,13 +40,25 @@ def main() -> None:
     ap.add_argument("--side-info", action="store_true")
     ap.add_argument("--partitions", type=int, default=4,
                     help="graph engine partitions (simulated servers)")
+    ap.add_argument("--engine-backend", default="inproc", choices=["inproc", "mp"],
+                    help="'mp' serves partitions from shared-memory worker "
+                         "processes (graph/service) instead of in-process")
+    ap.add_argument("--engine-workers", type=int, default=2,
+                    help="worker processes for --engine-backend=mp")
     ap.add_argument("--warm-start", default=None, help="npz of pre-trained tables")
     ap.add_argument("--save", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     ds = generate(SPECS[args.dataset], seed=args.seed)
-    engine = DistributedGraphEngine(ds.graph, num_partitions=args.partitions)
+    # mp backend: hand the trainer the bare graph — the GraphClient
+    # partitions it straight into shared memory, so no in-process partition
+    # copies are ever built alongside the worker shards
+    engine = (
+        ds.graph
+        if args.engine_backend == "mp"
+        else DistributedGraphEngine(ds.graph, num_partitions=args.partitions)
+    )
     rels = ("u2click2i", "i2click2u")
 
     walk_based = args.model in WALK_MODELS
@@ -82,7 +94,9 @@ def main() -> None:
     trainer = Graph4RecTrainer(
         ds, engine, model_cfg, pipe_cfg,
         TrainerConfig(num_steps=args.steps, sparse_lr=1.0, log_every=50,
-                      seed=args.seed),
+                      seed=args.seed, engine_backend=args.engine_backend,
+                      num_engine_workers=args.engine_workers,
+                      num_engine_partitions=args.partitions),
     )
     params = trainer.init_params()
     if args.warm_start:
@@ -93,10 +107,19 @@ def main() -> None:
                                            else k: v for k, v in pre.items()})
         print(f"warm-started from {args.warm_start}")
 
-    result = trainer.train(params)
-    print("recall:", {k: round(v, 4) for k, v in result.eval_history[-1].items()})
-    print(f"engine: {engine.stats.neighbor_requests} neighbor requests, "
-          f"{engine.stats.cross_partition_requests} cross-partition")
+    with trainer:  # reaps mp engine workers on exit/exception
+        result = trainer.train(params)
+        # trainer.engine is the GraphClient when --engine-backend=mp; its
+        # stats mirror the in-process engine's counters exactly
+        eng = trainer.engine
+        print("recall:", {k: round(v, 4) for k, v in result.eval_history[-1].items()})
+        print(f"engine: {eng.stats.neighbor_requests} neighbor requests, "
+              f"{eng.stats.cross_partition_requests} cross-partition")
+        if args.engine_backend == "mp":
+            agg = eng.aggregate_stats()
+            print(f"workers: {agg['num_workers']} procs served "
+                  f"{agg['neighbor_requests']} queries in {agg['batches']} "
+                  f"request rounds ({agg['busy_s']:.2f}s busy)")
     if args.save:
         checkpoint.save(args.save, result.params)
         print("saved", args.save)

@@ -25,6 +25,9 @@ from repro.core import loss as loss_lib
 from repro.embedding import table as emb
 from repro.sampling.ego import EgoBatch, EgoConfig
 from repro.sampling.pipeline import TrainBatch
+from repro.utils import get_logger
+
+log = get_logger("repro.model")
 
 PAD = -1
 Params = Dict[str, jnp.ndarray]
@@ -42,6 +45,11 @@ class Graph4RecConfig:
     # equivalent to "values" (padded value lists through embed_nodes); keep
     # "values" for slots whose vocab is too large for dense count rows.
     slot_mode: str = "bag"  # bag | values
+    # Bag vocab guard: a 'bag'-mode slot whose vocab exceeds this many rows
+    # falls back to the 'values' representation (with a one-time warning)
+    # instead of materializing an O(num_nodes x vocab) count matrix. 0
+    # disables the guard.
+    bag_vocab_limit: int = 32768
     loss: str = "inbatch_softmax"  # inbatch_softmax | inbatch_sigmoid | neg_sampling
     temperature: float = 1.0
     use_kernel_loss: bool = False
@@ -49,6 +57,47 @@ class Graph4RecConfig:
     @property
     def is_walk_based(self) -> bool:
         return self.gnn is None
+
+
+# one warning per (slot, vocab, limit) combination per process
+_bag_fallback_warned: set = set()
+
+
+def _split_slot_specs(
+    cfg: "Graph4RecConfig",
+) -> Tuple[Tuple[emb.SlotSpec, ...], Tuple[emb.SlotSpec, ...]]:
+    """(bag-mode specs, values-mode specs) after the bag vocab guard."""
+    if not cfg.use_side_info or not cfg.embedding.slots:
+        return (), ()
+    if cfg.slot_mode == "values":
+        return (), tuple(cfg.embedding.slots)
+    if cfg.slot_mode != "bag":
+        raise ValueError(f"unknown slot_mode {cfg.slot_mode!r}")
+    bag, values = [], []
+    for spec in cfg.embedding.slots:
+        if cfg.bag_vocab_limit and spec.vocab_size > cfg.bag_vocab_limit:
+            key = (spec.name, spec.vocab_size, cfg.bag_vocab_limit)
+            if key not in _bag_fallback_warned:
+                _bag_fallback_warned.add(key)
+                log.warning(
+                    "slot %r vocab %d exceeds bag_vocab_limit=%d; using "
+                    "slot_mode='values' for this slot instead of a dense "
+                    "(num_nodes, %d) count matrix",
+                    spec.name, spec.vocab_size, cfg.bag_vocab_limit,
+                    spec.vocab_size,
+                )
+            values.append(spec)
+        else:
+            bag.append(spec)
+    return tuple(bag), tuple(values)
+
+
+def bag_slot_specs(cfg: "Graph4RecConfig") -> Tuple[emb.SlotSpec, ...]:
+    return _split_slot_specs(cfg)[0]
+
+
+def value_slot_specs(cfg: "Graph4RecConfig") -> Tuple[emb.SlotSpec, ...]:
+    return _split_slot_specs(cfg)[1]
 
 
 def init_model_params(key: jax.Array, cfg: Graph4RecConfig) -> Params:
@@ -81,9 +130,12 @@ def _embed(
     slots: Optional[Mapping[str, jnp.ndarray]],
     slot_counts: Optional[Mapping[str, jnp.ndarray]],
 ) -> jnp.ndarray:
-    if slot_counts is not None:
-        return emb.embed_nodes_bag(e, ids, slot_counts, pad_id=PAD)
-    return emb.embed_nodes(e, ids, slots, pad_id=PAD)
+    # A slot arrives through exactly one representation: count matrices for
+    # bag-mode slots, padded value lists for values-mode (including slots the
+    # bag vocab guard demoted). Both may be present in one batch.
+    return emb.embed_nodes_mixed(
+        e, ids, slot_values=slots, slot_counts=slot_counts, pad_id=PAD
+    )
 
 
 def encode_ids(
@@ -134,14 +186,16 @@ _slot_count_cache: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 def slot_count_arrays(graph, cfg: Graph4RecConfig) -> Dict[str, jnp.ndarray]:
-    """Count matrices for every configured slot (the 'bag' side-info path).
+    """Count matrices for the bag-mode slots (the 'bag' side-info path).
 
-    Cached per (graph, slot specs): slot values are static data, so callers
-    like ``device_batch`` can omit the precomputed argument without paying a
-    per-batch O(num_nodes x vocab) rebuild.
+    Slots the bag vocab guard demoted to 'values' are skipped — their
+    O(num_nodes x vocab) count matrix is exactly what the guard exists to
+    avoid. Cached per (graph, bag specs): slot values are static data, so
+    callers like ``device_batch`` can omit the precomputed argument without
+    paying a per-batch rebuild.
     """
     per_graph = _slot_count_cache.setdefault(graph, {})
-    key = tuple(cfg.embedding.slots)
+    key = bag_slot_specs(cfg)
     if key not in per_graph:
         per_graph[key] = {
             spec.name: jnp.asarray(
@@ -150,7 +204,7 @@ def slot_count_arrays(graph, cfg: Graph4RecConfig) -> Dict[str, jnp.ndarray]:
                     graph.num_nodes, spec.vocab_size, spec.max_values,
                 )
             )
-            for spec in cfg.embedding.slots
+            for spec in key
         }
     return per_graph[key]
 
@@ -189,16 +243,15 @@ def _slots_for_ids(
 
 
 def _values_mode(cfg: Graph4RecConfig) -> bool:
-    return cfg.use_side_info and cfg.slot_mode == "values"
+    return bool(value_slot_specs(cfg))
 
 
 def _ego_arrays(graph, ego: EgoBatch, cfg: Graph4RecConfig):
     levels = [jnp.asarray(l) for l in ego.levels]
     slots = None
-    if _values_mode(cfg):
-        slots = [
-            _slots_for_ids(graph, l, cfg.embedding.slots) for l in ego.levels
-        ]
+    vspecs = value_slot_specs(cfg)
+    if vspecs:
+        slots = [_slots_for_ids(graph, l, vspecs) for l in ego.levels]
         slots = [
             {k: jnp.asarray(v) for k, v in s.items()} for s in slots
         ]
@@ -219,21 +272,22 @@ def device_batch(
     they are computed on the fly otherwise.
     """
     out: Dict = {}
-    if cfg.use_side_info and cfg.slot_mode == "bag" and slot_counts is None:
+    bspecs, vspecs = _split_slot_specs(cfg)
+    if bspecs and slot_counts is None:
         slot_counts = slot_count_arrays(graph, cfg)
     if cfg.is_walk_based:
         for name, ids in (("src", batch.src_ids), ("dst", batch.dst_ids)):
             slots = (
-                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, cfg.embedding.slots).items()}
-                if _values_mode(cfg)
+                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, vspecs).items()}
+                if vspecs
                 else None
             )
             out[name] = (jnp.asarray(ids), slots)
         if batch.neg_ids is not None:
             ids = batch.neg_ids.reshape(-1)
             slots = (
-                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, cfg.embedding.slots).items()}
-                if _values_mode(cfg)
+                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, vspecs).items()}
+                if vspecs
                 else None
             )
             out["neg"] = (jnp.asarray(ids), slots)
@@ -242,7 +296,7 @@ def device_batch(
         out["dst"] = _ego_arrays(graph, batch.dst_ego, cfg)
         if batch.neg_ego is not None:
             out["neg"] = _ego_arrays(graph, batch.neg_ego, cfg)
-    if cfg.use_side_info and cfg.slot_mode == "bag":
+    if bspecs:
         out["slot_counts"] = dict(slot_counts)
     return out
 
@@ -271,8 +325,9 @@ def sparse_device_batch(
     if buckets is None:
         buckets = {}
     out: Dict = {}
-    vm = _values_mode(cfg)
-    bag = cfg.use_side_info and cfg.slot_mode == "bag"
+    bspecs, vspecs = _split_slot_specs(cfg)
+    vm = bool(vspecs)
+    bag = bool(bspecs)
 
     if cfg.is_walk_based:
         parts: Dict[str, np.ndarray] = {"src": batch.src_ids, "dst": batch.dst_ids}
@@ -299,13 +354,13 @@ def sparse_device_batch(
     if vm:
         for pname, p in parts.items():
             if cfg.is_walk_based:
-                s = _slots_for_ids(graph, np.asarray(p).reshape(-1), cfg.embedding.slots)
+                s = _slots_for_ids(graph, np.asarray(p).reshape(-1), vspecs)
                 part_slots[pname] = s
                 for sn, arr in s.items():
                     slot_globals[sn].append(arr)
             else:
                 per_level = [
-                    _slots_for_ids(graph, l, cfg.embedding.slots) for l in p.levels
+                    _slots_for_ids(graph, l, vspecs) for l in p.levels
                 ]
                 part_slots[pname] = per_level
                 for lv in per_level:
@@ -313,7 +368,7 @@ def sparse_device_batch(
                         slot_globals[sn].append(arr)
     if bag:
         real_nodes = uniq_node[uniq_node >= 0]
-        for spec in cfg.embedding.slots:
+        for spec in bspecs:
             sf = graph.slots[spec.name]
             slot_globals[spec.name].append(
                 emb.pad_slot_values(
@@ -355,7 +410,7 @@ def sparse_device_batch(
         out["slot_counts"] = {}
         n_bucket = len(uniq_node)
         offset = n_bucket - int((uniq_node >= 0).sum())
-        for spec in cfg.embedding.slots:
+        for spec in bspecs:
             u = uniq[f"slot:{spec.name}"]
             vals = slot_globals[spec.name][0]  # (n_real, max_values) global ids
             cmat = np.zeros((n_bucket, len(u)), np.float32)
@@ -387,21 +442,18 @@ def encode_all_nodes(
     encode (the paper evaluates the same way — inference-time neighbor
     sampling)."""
     N = graph.num_nodes
-    slot_counts = (
-        slot_count_arrays(graph, cfg)
-        if cfg.use_side_info and cfg.slot_mode == "bag"
-        else None
-    )
+    bspecs, vspecs = _split_slot_specs(cfg)
+    slot_counts = slot_count_arrays(graph, cfg) if bspecs else None
     if cfg.is_walk_based:
         ids = np.arange(N, dtype=np.int64)
         outs = []
         for lo in range(0, N, batch_size):
             chunk = ids[lo : lo + batch_size]
             slots = None
-            if _values_mode(cfg):
+            if vspecs:
                 slots = {
                     k: jnp.asarray(v)
-                    for k, v in _slots_for_ids(graph, chunk, cfg.embedding.slots).items()
+                    for k, v in _slots_for_ids(graph, chunk, vspecs).items()
                 }
             outs.append(
                 np.asarray(

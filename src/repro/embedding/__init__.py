@@ -1,6 +1,7 @@
 from repro.embedding.table import (
     EmbeddingConfig, SlotSpec, init_params, abstract_params, param_specs,
-    lookup, ps_lookup, embed_nodes, embed_nodes_bag, pad_slot_values,
+    lookup, ps_lookup, embed_nodes, embed_nodes_bag, embed_nodes_mixed,
+    pad_slot_values,
     slot_count_matrix,
     unique_pad_ids, remap_ids, gather_rows, scatter_rows,
     save_table, load_table, warm_start,

@@ -275,6 +275,33 @@ def embed_nodes_bag(
     return h
 
 
+def embed_nodes_mixed(
+    params: Mapping[str, jnp.ndarray],
+    ids: jnp.ndarray,
+    slot_values: Optional[Mapping[str, jnp.ndarray]] = None,
+    slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
+    pad_id: int = -1,
+) -> jnp.ndarray:
+    """ID embedding + side info with a per-slot bag/values split.
+
+    Slots may arrive through either representation simultaneously: small
+    vocabs as count-matrix GEMMs (``slot_counts``, the 'bag' form), large
+    vocabs as padded value lists (``slot_values``) — the fallback the bag
+    vocab guard (``core.model.Graph4RecConfig.bag_vocab_limit``) selects so
+    no O(num_nodes x vocab) count matrix is ever materialized. A slot must
+    appear in at most one of the two mappings.
+    """
+    h = lookup(params["node"], ids, pad_id)
+    if slot_counts:
+        for name, cmat in slot_counts.items():
+            c = lookup(cmat, ids, pad_id)  # (..., vocab); zero row for PAD ids
+            h = h + c @ params[f"slot:{name}"]
+    if slot_values:
+        for name, vals in slot_values.items():
+            h = h + lookup(params[f"slot:{name}"], vals, pad_id).sum(axis=-2)
+    return h
+
+
 # --------------------------------------------------------------- side info
 def pad_slot_values(
     slot_indptr: np.ndarray,

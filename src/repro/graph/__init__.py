@@ -3,4 +3,7 @@ from repro.graph.generator import (
     DatasetSpec, RecsysDataset, generate, SPECS,
     RETAILROCKET, REC15, TMALL, UB, TOY,
 )
-from repro.graph.engine import DistributedGraphEngine, EngineStats
+from repro.graph.engine import (
+    DistributedGraphEngine, EngineStats, engine_sample_many,
+)
+from repro.graph.service import EngineWorkerError, GraphClient

@@ -15,17 +15,87 @@ sharded NumPy engine with the same ownership semantics:
 
 The engine is API-compatible with ``HeteroGraph.sample_neighbors`` so the
 sampling pipeline (repro/sampling) can run against either.
+
+Randomness contract (shared with the out-of-process engine in
+``graph/service``): a ``sample_neighbors``/``sample_many`` call draws ONE
+64-bit seed per query from the caller's generator and derives an independent
+per-partition generator ``default_rng([seed, part_id])`` for the actual
+offset draws. Results therefore depend only on (caller stream, partition
+contents) — never on which process answers a partition or how concurrent
+callers interleave — which is what makes the multi-process backend
+(``graph/service.GraphClient``) bitwise-identical to this one.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.graph.hetero_graph import CSR, HeteroGraph
 from repro.utils.ragged import ragged_row_offsets
+
+# Exclusive upper bound for the per-query seed draw (full int64 range).
+SEED_BOUND = np.iinfo(np.int64).max
+
+
+def partition_rng(seed: int, part_id: int) -> np.random.Generator:
+    """The per-(query, partition) generator both engine backends use."""
+    return np.random.default_rng([int(seed), int(part_id)])
+
+
+def sample_csr_rows(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    prng: np.random.Generator,
+    local_rows: np.ndarray,
+    num_samples: int,
+    pad_id: int,
+    degs_all: Optional[np.ndarray] = None,
+    out: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Uniform with-replacement sampling from CSR rows — the one primitive
+    every partition server (in-process or worker process) runs.
+
+    ``degs_all`` (precomputed full-shard degree array) and ``out`` (a
+    caller-provided output buffer, e.g. an int32 view into a shared-memory
+    reply slab) are worker-process fast paths; results are bitwise-equal to
+    the defaults because the random draws see the same numeric bounds.
+    """
+    starts = indptr[local_rows]
+    if degs_all is not None:
+        degs = degs_all[local_rows]
+    else:
+        degs = indptr[local_rows + 1] - starts
+    if out is None:
+        out = np.full((len(local_rows), num_samples), pad_id, dtype=np.int64)
+    else:
+        out.fill(pad_id)
+    has = degs > 0
+    if has.any():
+        offs = prng.integers(
+            0, np.maximum(degs[has][:, None], 1), size=(int(has.sum()), num_samples)
+        )
+        out[has] = indices[starts[has][:, None] + offs]
+    return out
+
+
+def engine_sample_many(engine, rng: np.random.Generator, queries: Sequence[Tuple]):
+    """Batched multi-query sampling against any engine-like object.
+
+    ``queries`` is a sequence of ``(nodes, relation, num_samples, pad_id)``.
+    Engines that implement ``sample_many`` (both graph-engine backends) get
+    the whole group in one call — the mp client turns it into one request
+    round per worker; plain ``HeteroGraph`` falls back to a per-query loop.
+    """
+    fn = getattr(engine, "sample_many", None)
+    if fn is not None:
+        return fn(rng, queries)
+    return [
+        engine.sample_neighbors(rng, nodes, rel, k, pad_id=pad)
+        for nodes, rel, k, pad in queries
+    ]
 
 
 @dataclasses.dataclass
@@ -118,16 +188,7 @@ class _Partition:
         pad_id: int,
     ) -> np.ndarray:
         indptr, indices = self.rel_rows[relation]
-        starts = indptr[local_rows]
-        degs = indptr[local_rows + 1] - starts
-        out = np.full((len(local_rows), num_samples), pad_id, dtype=np.int64)
-        has = degs > 0
-        if has.any():
-            offs = rng.integers(
-                0, np.maximum(degs[has][:, None], 1), size=(int(has.sum()), num_samples)
-            )
-            out[has] = indices[starts[has][:, None] + offs]
-        return out
+        return sample_csr_rows(indptr, indices, rng, local_rows, num_samples, pad_id)
 
 
 class DistributedGraphEngine:
@@ -161,6 +222,7 @@ class DistributedGraphEngine:
         pad_id: int = -1,
     ) -> np.ndarray:
         nodes = np.asarray(nodes, dtype=np.int64)
+        seed = int(rng.integers(0, SEED_BOUND))
         owners = nodes % self.num_partitions
         self.stats.add(len(nodes), int((owners != self.client_part).sum()))
         out = np.empty((len(nodes), num_samples), dtype=np.int64)
@@ -170,9 +232,23 @@ class DistributedGraphEngine:
                 continue
             local_rows = nodes[mask] // self.num_partitions
             out[mask] = self.partitions[p].sample(
-                rng, local_rows, relation, num_samples, pad_id
+                partition_rng(seed, p), local_rows, relation, num_samples, pad_id
             )
         return out
+
+    def sample_many(
+        self, rng: np.random.Generator, queries: Sequence[Tuple]
+    ) -> List[np.ndarray]:
+        """Serve a group of ``(nodes, relation, num_samples, pad_id)`` queries.
+
+        In-process this is a plain loop; the signature (and the one-seed-per-
+        query randomness contract) matches ``GraphClient.sample_many``, which
+        dispatches the same group as one pipelined request round per worker.
+        """
+        return [
+            self.sample_neighbors(rng, nodes, rel, k, pad_id=pad)
+            for nodes, rel, k, pad in queries
+        ]
 
     # walkers also need single-neighbor steps; reuse the batched path
     def step(

@@ -1,0 +1,217 @@
+"""Graph-service worker: one process serving neighbor queries for its shards.
+
+A worker attaches the shared-memory CSR shards of the partitions it owns
+(zero-copy — no adjacency is ever pickled to a worker) and loops on a duplex
+pipe serving batched requests. The module imports only NumPy-side code so
+spawned workers never pay a JAX import.
+
+Protocol (one tuple per message, pickled over the pipe):
+
+    ("sample", rid, slot, [(relation, part_id, local_rows, k, pad_id, seed), ...])
+        -> ("ok", rid, ("shm", slot))        replies written as int32 arrays
+                                             into the worker's reply-slab
+                                             slot (offsets via reply_layout)
+        -> ("ok", rid, ("pickle", [arrays])) fallback when a reply group is
+                                             too large for a slab slot
+    ("stats", rid)    -> ("ok", rid, {counter dict})
+    ("reset", rid)    -> ("ok", rid, None)
+    ("shutdown", rid) -> worker replies ("ok", rid, None) and exits
+
+Reply transport: only the tag crosses the pipe on the shm path — the sample
+payload lands in shared memory (int32: CSR indices are int32, so nothing is
+lost), so the client never pays pickle/copy costs proportional to
+batch x num_samples and its reader thread stays off the hot path.
+
+Any per-request failure is reported as ("err", rid, traceback_string) — the
+client re-raises it as ``EngineWorkerError`` — so a bad relation name in one
+query can never wedge the service.
+
+Randomness: each sub-request derives ``partition_rng(seed, part_id)`` — the
+same derivation the in-process engine uses — so replies are bitwise
+independent of which process serves a partition.
+
+Liveness: the loop wakes every ``_POLL_S`` to check its parent is still
+alive (spawned workers are re-parented when the trainer dies) and exits on
+orphaning, so a crashed trainer never strands graph servers.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import time
+import traceback
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.graph.engine import partition_rng, sample_csr_rows
+from repro.graph.service.shm import (
+    ShardManifest, attach_segment, attach_shard, reply_layout, sampleq_layout,
+    slot_view,
+)
+
+_POLL_S = 0.25
+
+
+def _parent_alive() -> bool:
+    parent = mp.parent_process()
+    if parent is not None:
+        return parent.is_alive()
+    return os.getppid() != 1  # fork fallback: re-parented to init == orphaned
+
+
+def worker_main(
+    worker_id: int,
+    manifests: Sequence[ShardManifest],
+    conn,
+    slab_name: str = "",
+    slot_bytes: int = 0,
+) -> None:
+    """Entry point of one graph-service worker process."""
+    segs = []
+    slab = None
+    stats: Dict[str, int] = {
+        "worker_id": worker_id,
+        "neighbor_requests": 0,
+        "sub_requests": 0,
+        "batches": 0,
+        "busy_ns": 0,
+        "shm_replies": 0,
+        "pickle_replies": 0,
+    }
+    try:
+        shards: Dict[int, Dict[str, np.ndarray]] = {}
+        for m in manifests:
+            seg, views = attach_shard(m)
+            segs.append(seg)
+            shards[m.part_id] = views
+        if slab_name:
+            slab = attach_segment(slab_name)
+            segs.append(slab)
+        conn.send(("ready", worker_id, [m.part_id for m in manifests]))
+        while True:
+            if not conn.poll(_POLL_S):
+                if not _parent_alive():
+                    return
+                continue
+            try:
+                msg = conn.recv()
+            except EOFError:
+                return  # client closed its end
+            op, rid = msg[0], msg[1]
+            if op == "shutdown":
+                conn.send(("ok", rid, None))
+                return
+            try:
+                if op == "sample":
+                    t0 = time.perf_counter_ns()
+                    slot, subs = msg[2], msg[3]
+                    offsets = (
+                        reply_layout(
+                            [(len(rows), k) for _, _, rows, k, _, _ in subs],
+                            slot_bytes,
+                        )
+                        if slab is not None
+                        else None
+                    )
+                    replies: List[np.ndarray] = []
+                    served = 0
+                    for si, (relation, part_id, local_rows, k, pad_id, seed) in enumerate(subs):
+                        views = shards[part_id]
+                        out = (
+                            slot_view(
+                                slab, slot, slot_bytes, offsets[si],
+                                (len(local_rows), k),
+                            )
+                            if offsets is not None
+                            else None
+                        )
+                        sampled = sample_csr_rows(
+                            views[f"{relation}/indptr"],
+                            views[f"{relation}/indices"],
+                            partition_rng(seed, part_id),
+                            local_rows,
+                            k,
+                            pad_id,
+                            degs_all=views[f"{relation}/degs"],
+                            out=out,
+                        )
+                        if offsets is None:
+                            replies.append(sampled)
+                        served += len(local_rows)
+                    stats["neighbor_requests"] += served
+                    stats["sub_requests"] += len(subs)
+                    stats["batches"] += 1
+                    if offsets is not None:
+                        stats["shm_replies"] += 1
+                        payload = ("shm", slot)
+                    else:
+                        stats["pickle_replies"] += 1
+                        payload = ("pickle", replies)
+                    stats["busy_ns"] += time.perf_counter_ns() - t0
+                    conn.send(("ok", rid, payload))
+                elif op == "sampleq":
+                    # whole-call exchange (balanced dispatch): requests AND
+                    # caller-order composition live in the slab slot, so the
+                    # client's GIL never touches per-partition scatters
+                    t0 = time.perf_counter_ns()
+                    slot, metas = msg[2], msg[3]
+                    offsets = sampleq_layout(
+                        [(m[4], m[1]) for m in metas], slot_bytes
+                    )
+                    served = 0
+                    num_parts = manifests[0].num_parts
+                    for (relation, k, pad_id, seed, n, starts), (
+                        a_off, b_off, r_off,
+                    ) in zip(metas, offsets):
+                        nodes = slot_view(slab, slot, slot_bytes, a_off, (n,))
+                        order = slot_view(slab, slot, slot_bytes, b_off, (n,))
+                        reply = slot_view(slab, slot, slot_bytes, r_off, (n, k))
+                        for p in range(num_parts):
+                            lo, hi = starts[p], starts[p + 1]
+                            if lo == hi:
+                                continue
+                            views = shards[p]
+                            sampled = sample_csr_rows(
+                                views[f"{relation}/indptr"],
+                                views[f"{relation}/indices"],
+                                partition_rng(seed, p),
+                                nodes[lo:hi] // num_parts,
+                                k,
+                                pad_id,
+                                degs_all=views[f"{relation}/degs"],
+                                out=np.empty((hi - lo, k), dtype=np.int32),
+                            )
+                            reply[order[lo:hi]] = sampled
+                        served += n
+                    stats["neighbor_requests"] += served
+                    stats["sub_requests"] += len(metas)
+                    stats["batches"] += 1
+                    stats["shm_replies"] += 1
+                    stats["busy_ns"] += time.perf_counter_ns() - t0
+                    conn.send(("ok", rid, ("shmq", slot)))
+                elif op == "stats":
+                    conn.send(("ok", rid, dict(stats)))
+                elif op == "reset":
+                    for key in (
+                        "neighbor_requests", "sub_requests", "batches",
+                        "busy_ns", "shm_replies", "pickle_replies",
+                    ):
+                        stats[key] = 0
+                    conn.send(("ok", rid, None))
+                else:
+                    conn.send(("err", rid, f"unknown op {op!r}"))
+            except Exception:
+                conn.send(("err", rid, traceback.format_exc()))
+    except (EOFError, BrokenPipeError, KeyboardInterrupt):
+        pass
+    finally:
+        for seg in segs:
+            try:
+                seg.close()
+            except Exception:
+                pass
+        try:
+            conn.close()
+        except Exception:
+            pass

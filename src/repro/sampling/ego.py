@@ -25,6 +25,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.graph.engine import engine_sample_many
+
 PAD = -1
 
 
@@ -85,9 +87,10 @@ def sample_ego_batch(
 ) -> EgoBatch:
     """Sample relation-wise ego graphs for ``centers``.
 
-    Per hop k and relation r, issues ONE batched neighbor request for all
-    frontier nodes — matching the engine's batched RPC. PAD frontier slots
-    propagate PAD children.
+    Per hop k, issues ONE ``sample_many`` query group covering every
+    relation's batched neighbor request for all frontier nodes — matching
+    the engine's batched RPC (a single pipelined round-trip per worker on
+    the mp backend). PAD frontier slots propagate PAD children.
     """
     centers = np.asarray(centers, dtype=np.int64).reshape(-1)
     B = len(centers)
@@ -99,11 +102,15 @@ def sample_ego_batch(
         nxt = np.full((B, W, R, fanout), PAD, dtype=np.int64)
         flat = frontier.reshape(-1)
         valid = flat != PAD
-        for ri, rel in enumerate(config.relations):
-            if valid.any():
-                sampled = engine.sample_neighbors(
-                    rng, flat[valid], rel, fanout, pad_id=PAD
-                )
+        if valid.any():
+            # ONE frontier array shared by every relation's query: the mp
+            # client routes queries with identical node arrays once (its
+            # cache is keyed by array identity)
+            frontier_nodes = flat[valid]
+            queries = [
+                (frontier_nodes, rel, fanout, PAD) for rel in config.relations
+            ]
+            for ri, sampled in enumerate(engine_sample_many(engine, rng, queries)):
                 block = np.full((B * W, fanout), PAD, dtype=np.int64)
                 block[valid] = sampled
                 nxt[:, :, ri, :] = block.reshape(B, W, fanout)

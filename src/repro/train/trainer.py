@@ -81,6 +81,18 @@ class TrainerConfig:
     # Drain completed on-device losses to host floats every this many steps
     # (keeps only the in-flight tail on device). 0 defers to the end of run.
     loss_fetch_every: int = 64
+    # Graph engine backend. "inproc" samples from the engine object passed to
+    # the trainer; "mp" wraps its graph in a graph/service.GraphClient —
+    # partition CSR shards in POSIX shared memory served by worker processes
+    # — so the prefetch producer is never sampling-bound on this process's
+    # core. Both backends are bitwise-identical under a fixed seed.
+    engine_backend: str = "inproc"  # inproc | mp
+    # Worker processes for the "mp" backend (clamped to num_partitions).
+    num_engine_workers: int = 2
+    # Partition count when the "mp" trainer is handed a bare HeteroGraph
+    # (the memory-frugal setup: no in-process partition copies are ever
+    # built). Ignored when an engine is passed — its partitioning wins.
+    num_engine_partitions: int = 4
 
 
 @dataclasses.dataclass
@@ -97,7 +109,11 @@ _DONE = object()
 
 class _Prefetcher:
     """Bounded background-thread prefetch between the host pipeline and the
-    device loop. Producer exceptions re-raise in the consumer."""
+    device loop. Producer exceptions re-raise in the consumer (original
+    traceback preserved), and the consumer never blocks indefinitely: it
+    polls the queue so a producer that dies without delivering its sentinel
+    (hard crash, killed interpreter thread) surfaces as an error instead of
+    hanging ``train()`` forever."""
 
     def __init__(self, it: Iterator, depth: int):
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(depth)))
@@ -137,10 +153,29 @@ class _Prefetcher:
 
     def __next__(self):
         while True:
-            item = self._q.get()
+            try:
+                item = self._q.get(timeout=0.5)
+            except queue.Empty:
+                if self._thread.is_alive():
+                    continue
+                # Producer is gone. It may have enqueued its final batches
+                # and sentinel in the window between our timeout and the
+                # aliveness check — drain once more before declaring it dead
+                # without a sentinel (killed mid-put / crashed outside the
+                # guarded region).
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    if self._err is not None:
+                        raise self._err
+                    raise RuntimeError(
+                        "prefetch producer thread died without delivering a "
+                        "batch or its error"
+                    )
             if item is _DONE:
                 self._thread.join(timeout=5.0)
                 if self._err is not None:
+                    # Same exception object -> original producer traceback.
                     raise self._err
                 raise StopIteration
             return item
@@ -177,6 +212,27 @@ class Graph4RecTrainer:
         cfg: TrainerConfig = TrainerConfig(),
     ):
         self.dataset = dataset
+        # "mp" backend: move the partitions out of this process. The client
+        # reuses the given engine's partitioning, so switching backends never
+        # changes sampling semantics; passing a bare HeteroGraph instead
+        # avoids ever materializing in-process partition copies (the client
+        # then partitions straight into shared memory,
+        # cfg.num_engine_partitions ways).
+        self._owned_client = None
+        if cfg.engine_backend == "mp":
+            from repro.graph.service import GraphClient
+
+            if hasattr(engine, "graph"):  # a built engine: inherit its layout
+                engine = GraphClient(engine, num_workers=cfg.num_engine_workers)
+            else:
+                engine = GraphClient(
+                    engine,
+                    num_partitions=cfg.num_engine_partitions,
+                    num_workers=cfg.num_engine_workers,
+                )
+            self._owned_client = engine
+        elif cfg.engine_backend != "inproc":
+            raise ValueError(f"unknown engine_backend {cfg.engine_backend!r}")
         self.engine = engine
         if cfg.use_kernel_aggr is not None and model_cfg.gnn is not None:
             model_cfg = dataclasses.replace(
@@ -212,8 +268,7 @@ class Graph4RecTrainer:
         self._slot_counts = (
             model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
             if (
-                self.model_cfg.use_side_info
-                and self.model_cfg.slot_mode == "bag"
+                model_lib.bag_slot_specs(self.model_cfg)
                 and not cfg.sparse_updates
             )
             else None
@@ -294,6 +349,19 @@ class Graph4RecTrainer:
         key = key if key is not None else jax.random.PRNGKey(self.cfg.seed)
         return model_lib.init_model_params(key, self.model_cfg)
 
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Reap engine worker processes (mp backend). Idempotent; also runs
+        automatically when ``train()`` raises and on context-manager exit."""
+        if self._owned_client is not None:
+            self._owned_client.shutdown()
+
+    def __enter__(self) -> "Graph4RecTrainer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def evaluate(self, params, split: str = "val") -> Dict[str, float]:
         ds = self.dataset
         rng = np.random.default_rng(self.cfg.seed + 7)
@@ -371,6 +439,12 @@ class Graph4RecTrainer:
                     log.info("step %d loss %.4f", step + 1, float(loss))
                 if cfg.eval_every and (step + 1) % cfg.eval_every == 0:
                     evals.append(self.evaluate(params))
+        except BaseException:
+            # The run is aborted (producer error — possibly a dead engine
+            # worker — or a caller interrupt): reap worker processes so
+            # nothing outlives the failed train() call.
+            self.close()
+            raise
         finally:
             if prefetcher is not None:
                 prefetcher.close()

@@ -1,3 +1,20 @@
-from repro.utils.pytree import tree_size_bytes, tree_num_params
 from repro.utils.log import get_logger
 from repro.utils.ragged import ragged_row_offsets
+
+# The pytree helpers pull in JAX. They are exported lazily (PEP 562) so that
+# NumPy-only consumers of this package — in particular the spawned graph
+# service workers, whose import chain reaches repro.utils via
+# graph/engine.py's ragged import — never pay the JAX import.
+_PYTREE_EXPORTS = ("tree_size_bytes", "tree_num_params")
+
+
+def __getattr__(name):
+    if name in _PYTREE_EXPORTS:
+        from repro.utils import pytree
+
+        return getattr(pytree, name)
+    raise AttributeError(f"module 'repro.utils' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_PYTREE_EXPORTS))

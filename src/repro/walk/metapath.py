@@ -24,6 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.graph.engine import engine_sample_many
 from repro.graph.hetero_graph import HeteroGraph, Relation
 
 PAD = -1
@@ -93,9 +94,10 @@ class MetapathWalker:
         self, rng: np.random.Generator, starts: np.ndarray, path_of: np.ndarray
     ) -> np.ndarray:
         """Advance walks of ALL metapaths together: per step, the frontier is
-        grouped by relation so one batched ``sample_neighbors`` request serves
-        every walk that needs that relation — one engine round-trip per
-        distinct relation per step instead of one per metapath."""
+        grouped by relation and ALL relation groups are issued as one
+        ``sample_many`` query group — a single engine round per step (one
+        pipelined request round-trip per worker on the mp backend) instead of
+        one call per metapath."""
         L = self.config.walk_len
         B = len(starts)
         out = np.full((B, L), PAD, dtype=np.int64)
@@ -108,11 +110,14 @@ class MetapathWalker:
                 break
             step_rel = sched[path_of, step - 1]
             nxt = np.full(B, PAD, dtype=np.int64)
-            for ri in np.unique(step_rel[alive]):
-                sel = alive & (step_rel == ri)
-                nxt[sel] = self.g.sample_neighbors(
-                    rng, cur[sel], rel_names[int(ri)], 1, pad_id=PAD
-                )[:, 0]
+            step_rids = np.unique(step_rel[alive])
+            sels = [alive & (step_rel == ri) for ri in step_rids]
+            queries = [
+                (cur[sel], rel_names[int(ri)], 1, PAD)
+                for ri, sel in zip(step_rids, sels)
+            ]
+            for sel, sampled in zip(sels, engine_sample_many(self.g, rng, queries)):
+                nxt[sel] = sampled[:, 0]
             alive = alive & (nxt != PAD)
             out[alive, step] = nxt[alive]
             cur = np.where(alive, nxt, cur)

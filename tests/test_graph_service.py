@@ -1,0 +1,308 @@
+"""Multi-process shared-memory graph engine tests (graph/service).
+
+Covers the ISSUE-3 acceptance surface: bitwise in-process vs multi-process
+sample equivalence under a fixed seed, cross-partition stat aggregation
+across the process boundary, worker crash -> raised error (never a hang),
+and double-shutdown idempotence. Every test runs under a hard SIGALRM
+watchdog so a stuck worker can fail tier-1 but can never wedge it.
+"""
+import signal
+import threading
+
+import numpy as np
+import pytest
+
+from repro.graph import DistributedGraphEngine, GraphClient, TOY, generate
+from repro.graph.service import EngineWorkerError, attach_shard, build_shard
+from repro.sampling import EgoConfig, PairConfig, PipelineConfig
+from repro.sampling.pipeline import SamplePipeline
+from repro.walk import WalkConfig
+
+pytestmark = pytest.mark.mp
+
+HARD_TIMEOUT_S = 120
+
+RELS = ("u2click2i", "i2click2u")
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    """Hard per-test timeout: a hung worker/pipe fails loudly, never blocks."""
+
+    def _expired(signum, frame):
+        raise TimeoutError(f"test exceeded hard {HARD_TIMEOUT_S}s watchdog")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(HARD_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(TOY, seed=1)
+
+
+@pytest.fixture(scope="module")
+def inproc(ds):
+    return DistributedGraphEngine(ds.graph, num_partitions=4)
+
+
+@pytest.fixture(scope="module")
+def client(ds):
+    with GraphClient(ds.graph, num_partitions=4, num_workers=2) as c:
+        yield c
+
+
+def _pipe_cfg(with_ego: bool = True) -> PipelineConfig:
+    return PipelineConfig(
+        walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+        pair=PairConfig(win_size=2, neg_mode="random", num_negatives=3),
+        ego=EgoConfig(relations=list(RELS), fanouts=[3, 2]) if with_ego else None,
+        batch_pairs=64,
+        walks_per_round=32,
+    )
+
+
+@pytest.mark.quick
+class TestShmShards:
+    def test_shard_roundtrip_bitwise(self, ds):
+        seg, manifest = build_shard(ds.graph, part_id=1, num_parts=4)
+        try:
+            att, views = attach_shard(manifest)
+            ref = DistributedGraphEngine(ds.graph, num_partitions=4).partitions[1]
+            for rel, (indptr, indices) in ref.rel_rows.items():
+                np.testing.assert_array_equal(views[f"{rel}/indptr"], indptr)
+                np.testing.assert_array_equal(views[f"{rel}/indices"], indices)
+                assert not views[f"{rel}/indices"].flags.writeable
+            att.close()
+        finally:
+            seg.close()
+            seg.unlink()
+
+
+@pytest.mark.quick
+class TestBitwiseEquivalence:
+    def test_sample_neighbors_matches_inproc(self, ds, inproc, client):
+        for seed in (0, 7):
+            a = inproc.sample_neighbors(
+                np.random.default_rng(seed), np.arange(80), RELS[0], 5
+            )
+            b = client.sample_neighbors(
+                np.random.default_rng(seed), np.arange(80), RELS[0], 5
+            )
+            np.testing.assert_array_equal(a, b)
+
+    def test_sample_many_matches_inproc(self, ds, inproc, client):
+        nodes = np.random.default_rng(3).integers(0, ds.graph.num_nodes, 120)
+        queries = [(nodes, RELS[0], 4, -1), (nodes[:50], RELS[1], 2, -1)]
+        a = inproc.sample_many(np.random.default_rng(11), queries)
+        b = client.sample_many(np.random.default_rng(11), queries)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_owner_dispatch_and_slab_overflow_match(self, ds, inproc):
+        """Owner fan-out, and the pickle fallback for calls too large for a
+        slab slot, are bitwise-identical to the balanced shm path."""
+        nodes = np.random.default_rng(5).integers(0, ds.graph.num_nodes, 300)
+        ref = inproc.sample_many(
+            np.random.default_rng(9), [(nodes, RELS[0], 6, -1), (nodes, RELS[1], 2, -1)]
+        )
+        for kw in (
+            dict(dispatch="owner"),
+            dict(dispatch="owner", slot_bytes=256),  # forces pickle replies
+            dict(dispatch="balanced", slot_bytes=256),  # falls back to owner
+        ):
+            with GraphClient(ds.graph, num_partitions=4, num_workers=2, **kw) as c:
+                got = c.sample_many(
+                    np.random.default_rng(9),
+                    [(nodes, RELS[0], 6, -1), (nodes, RELS[1], 2, -1)],
+                )
+                for x, y in zip(ref, got):
+                    np.testing.assert_array_equal(x, y)
+                if kw.get("slot_bytes") == 256:
+                    assert sum(
+                        s["pickle_replies"] for s in c.worker_stats()
+                    ) > 0
+
+    def test_async_submit_gather_pipelines(self, client):
+        """Two in-flight requests gathered out of submission order."""
+        rng1, rng2 = np.random.default_rng(1), np.random.default_rng(2)
+        h1 = client.submit(rng1, [(np.arange(60), RELS[0], 3, -1)])
+        h2 = client.submit(rng2, [(np.arange(60), RELS[0], 3, -1)])
+        out2 = client.gather(h2)[0]
+        out1 = client.gather(h1)[0]
+        ref1 = client.sample_neighbors(np.random.default_rng(1), np.arange(60), RELS[0], 3)
+        ref2 = client.sample_neighbors(np.random.default_rng(2), np.arange(60), RELS[0], 3)
+        np.testing.assert_array_equal(out1, ref1)
+        np.testing.assert_array_equal(out2, ref2)
+
+    def test_out_of_order_gather_never_reuses_held_slots(self, ds, inproc):
+        """Regression: deep pipelining with out-of-order gathers must not
+        hand a new request a slab slot an un-gathered request still owns
+        (the old ring-pointer allocation corrupted the straggler's reply)."""
+        with GraphClient(
+            ds.graph, num_partitions=4, num_workers=1, slab_slots=4
+        ) as c:
+            rngs = [np.random.default_rng(100 + i) for i in range(8)]
+            refs = [
+                inproc.sample_neighbors(
+                    np.random.default_rng(100 + i), np.arange(70), RELS[0], 4
+                )
+                for i in range(8)
+            ]
+            # fill the slab ring, then free ONE slot by gathering the newest
+            handles = {
+                i: c.submit(rngs[i], [(np.arange(70), RELS[0], 4, -1)])
+                for i in range(4)
+            }
+            np.testing.assert_array_equal(c.gather(handles.pop(3))[0], refs[3])
+            # these reservations recycle freed slots; the held ones (0..2)
+            # must keep their data intact the whole time
+            for i in range(4, 8):
+                h = c.submit(rngs[i], [(np.arange(70), RELS[0], 4, -1)])
+                np.testing.assert_array_equal(c.gather(h)[0], refs[i])
+            for i, h in handles.items():
+                np.testing.assert_array_equal(c.gather(h)[0], refs[i])
+
+
+class TestPipelineEquivalence:
+    def test_walks_egos_pairs_bitwise(self, ds, inproc, client):
+        """Fixed seed -> identical TrainBatches from either backend."""
+        a = list(SamplePipeline(inproc, _pipe_cfg(), seed=5).batches(3))
+        b = list(SamplePipeline(client, _pipe_cfg(), seed=5).batches(3))
+        assert len(a) == len(b) == 3
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x.src_ids, y.src_ids)
+            np.testing.assert_array_equal(x.dst_ids, y.dst_ids)
+            np.testing.assert_array_equal(x.neg_ids, y.neg_ids)
+            for ex, ey in ((x.src_ego, y.src_ego), (x.dst_ego, y.dst_ego),
+                           (x.neg_ego, y.neg_ego)):
+                for lx, ly in zip(ex.levels, ey.levels):
+                    np.testing.assert_array_equal(lx, ly)
+
+    def test_training_losses_bitwise(self, ds):
+        """engine_backend='mp' reproduces the inproc run loss-for-loss."""
+        from repro.core import Graph4RecConfig
+        from repro.embedding import EmbeddingConfig
+        from repro.train import Graph4RecTrainer, TrainerConfig
+
+        mc = Graph4RecConfig(
+            embedding=EmbeddingConfig(num_nodes=ds.graph.num_nodes, dim=16),
+            gnn=None, relations=RELS,
+        )
+        losses = {}
+        for backend in ("inproc", "mp"):
+            eng = DistributedGraphEngine(ds.graph, num_partitions=4)
+            tr = Graph4RecTrainer(
+                ds, eng, mc, _pipe_cfg(with_ego=False),
+                TrainerConfig(
+                    num_steps=8, log_every=0, eval_at_end=False, seed=2,
+                    engine_backend=backend, num_engine_workers=2,
+                ),
+            )
+            with tr:
+                losses[backend] = tr.train().losses
+        assert losses["inproc"] == losses["mp"]
+
+
+@pytest.mark.quick
+class TestStatsAggregation:
+    def test_worker_counters_survive_process_boundary(self, ds, inproc, client):
+        client.reset_stats()
+        inproc.stats.reset()
+        rng_a, rng_b = np.random.default_rng(0), np.random.default_rng(0)
+        for lo in (0, 40, 160):
+            nodes = np.arange(lo, lo + 40)
+            inproc.sample_neighbors(rng_a, nodes, RELS[0], 3)
+            client.sample_neighbors(rng_b, nodes, RELS[0], 3)
+        # client-side mirror matches the in-process engine exactly
+        assert client.stats.neighbor_requests == inproc.stats.neighbor_requests == 120
+        assert (
+            client.stats.cross_partition_requests
+            == inproc.stats.cross_partition_requests
+        )
+        # and the per-worker counters, summed across processes, cover every
+        # query the client issued
+        agg = client.aggregate_stats()
+        assert agg["neighbor_requests"] == client.stats.neighbor_requests
+        assert agg["num_workers"] == 2
+        per = client.worker_stats()
+        assert sum(s["neighbor_requests"] for s in per) == 120
+        assert all(s["batches"] > 0 for s in per)
+
+    def test_reset_stats_clears_both_sides(self, client):
+        client.sample_neighbors(np.random.default_rng(0), np.arange(20), RELS[0], 2)
+        client.reset_stats()
+        assert client.stats.neighbor_requests == 0
+        assert client.aggregate_stats()["neighbor_requests"] == 0
+
+
+class TestFailureModes:
+    def test_worker_error_raises_with_traceback(self, ds):
+        with GraphClient(
+            ds.graph, num_partitions=2, num_workers=1, slab_slots=4
+        ) as c:
+            # more failures than slab slots: error replies must recycle
+            # their slot (a leak would wedge the 5th call on reservation)
+            for _ in range(6):
+                with pytest.raises(EngineWorkerError, match="KeyError"):
+                    c.sample_neighbors(
+                        np.random.default_rng(0), np.arange(10), "no2such2rel", 2
+                    )
+            # the worker survives bad requests and keeps serving
+            out = c.sample_neighbors(np.random.default_rng(0), np.arange(10), RELS[0], 2)
+            assert out.shape == (10, 2)
+
+    def test_worker_crash_raises_not_hangs(self, ds):
+        c = GraphClient(ds.graph, num_partitions=2, num_workers=2)
+        try:
+            c._procs[0].kill()
+            with pytest.raises(EngineWorkerError, match="died|unreachable|closed"):
+                # several partitions -> some sub-request lands on the corpse
+                c.sample_neighbors(np.random.default_rng(0), np.arange(50), RELS[0], 2)
+        finally:
+            c.shutdown()
+        assert all(not p.is_alive() for p in c._procs)
+
+    def test_trainer_propagates_dead_workers_and_reaps(self, ds):
+        """A dead engine worker fails train() instead of blocking the queue,
+        and the trainer reaps the remaining workers on the way out."""
+        from repro.core import Graph4RecConfig
+        from repro.embedding import EmbeddingConfig
+        from repro.train import Graph4RecTrainer, TrainerConfig
+
+        mc = Graph4RecConfig(
+            embedding=EmbeddingConfig(num_nodes=ds.graph.num_nodes, dim=8),
+            gnn=None, relations=RELS,
+        )
+        eng = DistributedGraphEngine(ds.graph, num_partitions=4)
+        tr = Graph4RecTrainer(
+            ds, eng, mc, _pipe_cfg(with_ego=False),
+            TrainerConfig(
+                num_steps=50, log_every=0, eval_at_end=False,
+                engine_backend="mp", num_engine_workers=2,
+            ),
+        )
+        client = tr.engine
+        for proc in client._procs:
+            proc.kill()
+        with pytest.raises(EngineWorkerError):
+            tr.train()
+        # train()'s failure path reaped the service
+        assert all(not p.is_alive() for p in client._procs)
+
+    @pytest.mark.quick
+    def test_double_shutdown_idempotent(self, ds):
+        c = GraphClient(ds.graph, num_partitions=2, num_workers=1)
+        c.shutdown()
+        c.shutdown()  # second call is a no-op, not an error
+        with pytest.raises(RuntimeError):
+            c.sample_neighbors(np.random.default_rng(0), np.arange(4), RELS[0], 1)
+        # context-manager exit after manual shutdown is fine too
+        with GraphClient(ds.graph, num_partitions=2, num_workers=1) as c2:
+            c2.shutdown()
+        assert all(not p.is_alive() for p in c2._procs)

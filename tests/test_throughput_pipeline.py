@@ -192,6 +192,36 @@ class TestPrefetchTrainer:
         with pytest.raises(KeyError):
             tr.train()
 
+    def test_producer_error_keeps_original_traceback(self, ds):
+        """The consumer re-raises the producer's exception object, so the
+        traceback points into the pipeline code that actually failed."""
+        import traceback
+
+        from repro.train.trainer import _Prefetcher
+
+        def boom():
+            raise ValueError("pipeline exploded")
+            yield  # pragma: no cover
+
+        pf = _Prefetcher(boom(), depth=2)
+        with pytest.raises(ValueError, match="pipeline exploded") as ei:
+            next(pf)
+        frames = "".join(traceback.format_tb(ei.value.__traceback__))
+        assert "boom" in frames
+
+    def test_dead_producer_without_sentinel_raises_not_hangs(self, ds):
+        """A producer that dies without delivering its sentinel (hard crash)
+        must surface as an error in the consumer, never a queue hang."""
+        from repro.train.trainer import _Prefetcher
+
+        class _CrashingPrefetcher(_Prefetcher):
+            def _fill(self, it):  # thread dies before any put
+                return
+
+        pf = _CrashingPrefetcher(iter([1, 2]), depth=2)
+        with pytest.raises(RuntimeError, match="died without delivering"):
+            next(pf)
+
 
 class TestSlotBagMode:
     def test_bag_matches_values_exactly(self, ds):
@@ -235,6 +265,130 @@ class TestSlotBagMode:
                 np.asarray(gv[k]), np.asarray(gb[k]), rtol=1e-5, atol=1e-6,
                 err_msg=k,
             )
+
+
+class TestBagVocabGuard:
+    """ROADMAP 'sparse slot-count matrices', first step: big-vocab bag slots
+    fall back to the 'values' representation instead of materializing an
+    O(num_nodes x vocab) count matrix."""
+
+    def _cfg(self, ds, slot_mode, limit=32768):
+        import dataclasses as dc
+
+        from repro.embedding import SlotSpec
+
+        return Graph4RecConfig(
+            embedding=EmbeddingConfig(
+                num_nodes=ds.graph.num_nodes, dim=16,
+                slots=(SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 2)),
+            ),
+            gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
+                                num_layers=1, dim=16),
+            fanouts=(3,), relations=RELS,
+            use_side_info=True, slot_mode=slot_mode, bag_vocab_limit=limit,
+        )
+
+    def _batch(self, ds):
+        eng = DistributedGraphEngine(ds.graph, num_partitions=2)
+        pc = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+            pair=PairConfig(win_size=2),
+            ego=EgoConfig(relations=list(RELS), fanouts=[3]),
+            batch_pairs=32, walks_per_round=16,
+        )
+        return next(iter(SamplePipeline(eng, pc, seed=0).batches(1)))
+
+    def test_over_limit_slot_falls_back_to_values(self, ds):
+        from repro.core import model as model_lib
+
+        # slot vocabs are 64: a limit of 63 demotes both, 0 disables the guard
+        cfg = self._cfg(ds, "bag", limit=63)
+        assert model_lib.bag_slot_specs(cfg) == ()
+        assert len(model_lib.value_slot_specs(cfg)) == 2
+        assert model_lib.slot_count_arrays(ds.graph, cfg) == {}
+        cfg_off = self._cfg(ds, "bag", limit=0)
+        assert len(model_lib.bag_slot_specs(cfg_off)) == 2
+
+    def test_mixed_bag_values_matches_pure_values(self, ds):
+        """One slot over the limit, one under: the mixed batch must score
+        exactly like the all-values configuration."""
+        import dataclasses as dc
+
+        import jax
+        from repro.core import model as model_lib
+        from repro.embedding import SlotSpec
+
+        base = self._cfg(ds, "values")
+        # slot1 gets a big vocab (identical first-64 rows matter only for
+        # shape; values data stays in range) and a limit between the two
+        big = dc.replace(
+            base,
+            embedding=dc.replace(
+                base.embedding,
+                slots=(SlotSpec("slot0", 64, 3), SlotSpec("slot1", 200, 2)),
+            ),
+        )
+        mixed = dc.replace(big, slot_mode="bag", bag_vocab_limit=100)
+        assert [s.name for s in model_lib.bag_slot_specs(mixed)] == ["slot0"]
+        assert [s.name for s in model_lib.value_slot_specs(mixed)] == ["slot1"]
+        batch = self._batch(ds)
+        params = model_lib.init_model_params(jax.random.PRNGKey(0), big)
+        dev_v = model_lib.device_batch(ds.graph, batch, big)
+        dev_m = model_lib.device_batch(ds.graph, batch, mixed)
+        assert set(dev_m["slot_counts"]) == {"slot0"}
+        assert set(dev_m["src"][1][0]) == {"slot1"}
+        lv, gv = jax.value_and_grad(model_lib.loss_fn)(params, big, dev_v)
+        lm, gm = jax.value_and_grad(model_lib.loss_fn)(params, mixed, dev_m)
+        np.testing.assert_allclose(float(lv), float(lm), rtol=1e-6)
+        for k in gv:
+            np.testing.assert_allclose(
+                np.asarray(gv[k]), np.asarray(gm[k]), rtol=1e-5, atol=1e-6,
+                err_msg=k,
+            )
+
+    def test_mixed_sparse_batch_matches_pure_values(self, ds):
+        """Same equivalence under the gather->step->scatter batch layout."""
+        import dataclasses as dc
+
+        import jax
+        from repro.core import model as model_lib
+        from repro.embedding import SlotSpec, gather_rows
+
+        base = self._cfg(ds, "values")
+        big = dc.replace(
+            base,
+            embedding=dc.replace(
+                base.embedding,
+                slots=(SlotSpec("slot0", 64, 3), SlotSpec("slot1", 200, 2)),
+            ),
+        )
+        mixed = dc.replace(big, slot_mode="bag", bag_vocab_limit=100)
+        batch = self._batch(ds)
+        params = model_lib.init_model_params(jax.random.PRNGKey(0), big)
+        dev_v = model_lib.device_batch(ds.graph, batch, big)
+        dev_m = model_lib.sparse_device_batch(ds.graph, batch, mixed)
+        sub = {
+            k: gather_rows(params[f"emb/{k}"], v)
+            for k, v in dev_m["uniq"].items()
+        }
+        sub_params = {**params, **{f"emb/{k}": v for k, v in sub.items()}}
+        model_batch = {k: v for k, v in dev_m.items() if k != "uniq"}
+        lv = model_lib.loss_fn(params, big, dev_v)
+        lm = model_lib.loss_fn(sub_params, mixed, model_batch)
+        np.testing.assert_allclose(float(lv), float(lm), rtol=1e-6)
+
+    def test_fallback_warns_once(self, ds, caplog):
+        import logging
+
+        from repro.core import model as model_lib
+
+        model_lib._bag_fallback_warned.clear()
+        cfg = self._cfg(ds, "bag", limit=10)
+        with caplog.at_level(logging.WARNING, logger="repro.model"):
+            model_lib.bag_slot_specs(cfg)
+            model_lib.bag_slot_specs(cfg)
+        hits = [r for r in caplog.records if "bag_vocab_limit" in r.getMessage()]
+        assert len(hits) == 2  # one per slot, not per call
 
 
 class TestKernelAggrConfig:
