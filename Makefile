@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-throughput bench-step bench-engine
+.PHONY: test test-fast bench-throughput bench-step bench-engine bench-recall
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -16,3 +16,6 @@ bench-step:
 
 bench-engine:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --engine
+
+bench-recall:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_recall.py --quick

@@ -47,6 +47,20 @@ def main() -> None:
                     help="worker processes for --engine-backend=mp")
     ap.add_argument("--warm-start", default=None, help="npz of pre-trained tables")
     ap.add_argument("--save", default=None)
+    ap.add_argument("--eval-recall", default="device",
+                    choices=["device", "ivf", "bruteforce"],
+                    help="retrieval path for the final recall evaluation: "
+                         "'device' = chunked streaming top-k over every "
+                         "held-out user (exact, no subsampling), 'ivf' = "
+                         "coarse-partition approximate search, 'bruteforce' "
+                         "= the O(U*I) numpy oracle")
+    ap.add_argument("--eval-max-users", type=int, default=0,
+                    help="cap evaluated users (0 = all; the old behavior "
+                         "silently subsampled to 256)")
+    ap.add_argument("--export-embeddings", default=None, metavar="PATH",
+                    help="after training, run full-graph inference "
+                         "(repro.infer) and save the (num_nodes, dim) "
+                         "matrix as sharded npz via train/checkpoint.py")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -96,7 +110,9 @@ def main() -> None:
         TrainerConfig(num_steps=args.steps, sparse_lr=1.0, log_every=50,
                       seed=args.seed, engine_backend=args.engine_backend,
                       num_engine_workers=args.engine_workers,
-                      num_engine_partitions=args.partitions),
+                      num_engine_partitions=args.partitions,
+                      eval_method=args.eval_recall,
+                      eval_max_users=args.eval_max_users),
     )
     params = trainer.init_params()
     if args.warm_start:
@@ -121,8 +137,18 @@ def main() -> None:
                   f"{agg['neighbor_requests']} queries in {agg['batches']} "
                   f"request rounds ({agg['busy_s']:.2f}s busy)")
     if args.save:
-        checkpoint.save(args.save, result.params)
-        print("saved", args.save)
+        print("saved", checkpoint.save(args.save, result.params))
+    if args.export_embeddings:
+        from repro.infer import embed_all_nodes, export_embeddings
+
+        emb = embed_all_nodes(
+            result.params, model_cfg, engine, ds.graph, seed=args.seed
+        )
+        path = export_embeddings(
+            args.export_embeddings, emb, num_shards=4,
+            meta={"dataset": np.bytes_(args.dataset), "model": np.bytes_(args.model)},
+        )
+        print(f"exported full-graph embeddings {emb.shape} -> {path}")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,7 @@ import numpy as np
 from repro.core.hetero import HeteroGNNConfig, hetero_forward, init_hetero_params
 from repro.core import loss as loss_lib
 from repro.embedding import table as emb
-from repro.sampling.ego import EgoBatch, EgoConfig
+from repro.sampling.ego import EgoBatch
 from repro.sampling.pipeline import TrainBatch
 from repro.utils import get_logger
 
@@ -438,38 +438,12 @@ def encode_all_nodes(
 ) -> np.ndarray:
     """Embed every node for recall evaluation (§4.2).
 
-    Walk-based: one table read. GNN: sample an eval ego graph per node and
-    encode (the paper evaluates the same way — inference-time neighbor
-    sampling)."""
-    N = graph.num_nodes
-    bspecs, vspecs = _split_slot_specs(cfg)
-    slot_counts = slot_count_arrays(graph, cfg) if bspecs else None
-    if cfg.is_walk_based:
-        ids = np.arange(N, dtype=np.int64)
-        outs = []
-        for lo in range(0, N, batch_size):
-            chunk = ids[lo : lo + batch_size]
-            slots = None
-            if vspecs:
-                slots = {
-                    k: jnp.asarray(v)
-                    for k, v in _slots_for_ids(graph, chunk, vspecs).items()
-                }
-            outs.append(
-                np.asarray(
-                    encode_ids(params, cfg, jnp.asarray(chunk), slots, slot_counts)
-                )
-            )
-        return np.concatenate(outs, axis=0)
+    Back-compat wrapper around ``repro.infer.embed_all_nodes`` — the
+    full-graph inference subsystem (fixed-shape chunks, one jitted encoder
+    compile, engine-backend agnostic). Imported lazily to keep core free of
+    an infer dependency at module load."""
+    from repro.infer import embed_all_nodes
 
-    from repro.sampling.ego import sample_ego_batch
-
-    rels = list(cfg.relations) or graph.relation_names()[: cfg.gnn.num_relations]
-    ego_cfg = EgoConfig(relations=rels, fanouts=list(cfg.fanouts))
-    outs = []
-    for lo in range(0, N, batch_size):
-        ids = np.arange(lo, min(lo + batch_size, N), dtype=np.int64)
-        ego = sample_ego_batch(rng, engine, ids, ego_cfg)
-        levels, slots = _ego_arrays(graph, ego, cfg)
-        outs.append(np.asarray(encode_ego(params, cfg, levels, slots, slot_counts)))
-    return np.concatenate(outs, axis=0)
+    return embed_all_nodes(
+        params, cfg, engine, graph, batch_size=batch_size, rng=rng
+    )

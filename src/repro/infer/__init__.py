@@ -1,0 +1,12 @@
+"""Full-graph inference: trained checkpoint -> embeddings for every node.
+
+``embed_all_nodes`` sweeps the whole id space through the training encoder
+in fixed-shape chunks (any graph-engine backend, bitwise-deterministic
+under a fixed seed); ``export_embeddings``/``load_embeddings`` move the
+resulting (num_nodes, dim) matrix through ``train/checkpoint.py`` as
+row-range shards. The retrieval layer (repro.retrieval) serves recall from
+these matrices; ``examples/eval_recsys.py`` drives the full path.
+"""
+from repro.infer.embed import (
+    embed_all_nodes, export_embeddings, load_embeddings,
+)

@@ -1,0 +1,137 @@
+"""Full-graph batched inference: every node -> embedding, in fixed shapes.
+
+The trainer only ever embeds the nodes of its sampled batches; recall
+serving (§4.2) needs the embedding of *every* node. This module streams the
+whole node id space through the same encoder the trainer uses:
+
+- ids are swept in fixed-size chunks (the last chunk PAD-padded), so the
+  jitted encoder compiles exactly once per call regardless of graph size;
+- GNN models sample an inference-time ego graph per chunk through
+  ``sample_ego_batch`` -> ``engine_sample_many``, which means any engine
+  backend works unchanged — the in-process partitioned engine or the
+  multi-process shared-memory ``GraphClient`` (one pipelined request round
+  per hop). Both draw one seed per query from the caller RNG
+  (graph/engine.py randomness contract), so the produced matrix is bitwise
+  identical across backends under a fixed seed;
+- results land in a preallocated (num_nodes, dim) float32 matrix that
+  ``export_embeddings`` shards through ``train/checkpoint.py`` for hand-off
+  to the retrieval layer (repro.retrieval) or an external server.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as model_lib
+from repro.sampling.ego import EgoConfig, sample_ego_batch
+from repro.train import checkpoint
+
+PAD = -1
+
+
+def embed_all_nodes(
+    params,
+    cfg: "model_lib.Graph4RecConfig",
+    engine,
+    graph,
+    batch_size: int = 1024,
+    seed: int = 0,
+    rng: Optional[np.random.Generator] = None,
+) -> np.ndarray:
+    """Embed every node of ``graph`` -> (num_nodes, dim) float32.
+
+    ``engine`` is anything ``engine_sample_many`` accepts (HeteroGraph,
+    DistributedGraphEngine, or graph/service.GraphClient); walk-based
+    models never touch it. ``rng`` overrides ``seed`` for callers that
+    thread their own stream (the trainer's evaluate).
+    """
+    N = graph.num_nodes
+    batch_size = max(1, min(int(batch_size), N))
+    rng = rng if rng is not None else np.random.default_rng(seed)
+    bspecs, vspecs = model_lib._split_slot_specs(cfg)
+    slot_counts = model_lib.slot_count_arrays(graph, cfg) if bspecs else None
+
+    if cfg.is_walk_based:
+        enc = jax.jit(
+            lambda p, ids, slots: model_lib.encode_ids(p, cfg, ids, slots, slot_counts)
+        )
+    else:
+        enc = jax.jit(
+            lambda p, levels, slots: model_lib.encode_ego(
+                p, cfg, levels, slots, slot_counts
+            )
+        )
+        rels = list(cfg.relations) or graph.relation_names()[: cfg.gnn.num_relations]
+        ego_cfg = EgoConfig(relations=rels, fanouts=list(cfg.fanouts))
+
+    out: Optional[np.ndarray] = None
+    for lo in range(0, N, batch_size):
+        n_real = min(batch_size, N - lo)
+        ids = np.full(batch_size, PAD, dtype=np.int64)
+        ids[:n_real] = np.arange(lo, lo + n_real, dtype=np.int64)
+        if cfg.is_walk_based:
+            slots = None
+            if vspecs:
+                slots = {
+                    k: jnp.asarray(v)
+                    for k, v in model_lib._slots_for_ids(graph, ids, vspecs).items()
+                }
+            h = enc(params, jnp.asarray(ids), slots)
+        else:
+            ego = sample_ego_batch(rng, engine, ids, ego_cfg)
+            levels, slots = model_lib._ego_arrays(graph, ego, cfg)
+            h = enc(params, levels, slots)
+        h = np.asarray(h, dtype=np.float32)
+        if out is None:
+            out = np.empty((N, h.shape[-1]), dtype=np.float32)
+        out[lo : lo + n_real] = h[:n_real]
+    return out
+
+
+# ------------------------------------------------------------------- export
+def export_embeddings(
+    path: str,
+    emb: np.ndarray,
+    num_shards: int = 1,
+    meta: Optional[Dict] = None,
+) -> str:
+    """Shard a (num_nodes, dim) matrix row-wise and save via checkpoint.
+
+    Shards are contiguous row ranges (``np.array_split`` layout) — the
+    natural unit for a multi-host serving fleet where each replica memory-
+    maps its own rows. Returns the normalized checkpoint path.
+    """
+    emb = np.asarray(emb)
+    num_shards = max(1, min(int(num_shards), emb.shape[0] or 1))
+    tree = {
+        "meta": {
+            "num_nodes": np.int64(emb.shape[0]),
+            "dim": np.int64(emb.shape[1]),
+            "num_shards": np.int64(num_shards),
+            **(meta or {}),
+        },
+        "shards": {
+            f"{i:05d}": shard
+            for i, shard in enumerate(np.array_split(emb, num_shards, axis=0))
+        },
+    }
+    checkpoint.save(path, tree)
+    return checkpoint.normalize_path(path)
+
+
+def load_embeddings(path: str) -> np.ndarray:
+    """Reassemble an ``export_embeddings`` checkpoint -> (num_nodes, dim)."""
+    tree = checkpoint.load_dict(path)
+    shards = tree["shards"]
+    emb = np.concatenate([shards[k] for k in sorted(shards)], axis=0)
+    meta = tree["meta"]
+    if int(meta["num_nodes"]) != emb.shape[0] or int(meta["dim"]) != emb.shape[1]:
+        raise ValueError(
+            f"embedding checkpoint corrupt: meta says "
+            f"({int(meta['num_nodes'])}, {int(meta['dim'])}), shards sum to "
+            f"{emb.shape}"
+        )
+    return emb

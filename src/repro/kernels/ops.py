@@ -20,10 +20,29 @@ from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.inbatch_loss import inbatch_loss_rows_pallas
 from repro.kernels.row_adagrad import row_adagrad_scatter_pallas
 from repro.kernels.seg_aggr import seg_aggr_pallas
+from repro.kernels.topk import chunked_topk_pallas
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ----------------------------------------------------------------- retrieval
+def streaming_topk(
+    queries: jnp.ndarray,
+    items: jnp.ndarray,
+    k: int,
+    exclude: Optional[jnp.ndarray] = None,
+    item_chunk: int = 1024,
+    tile_q: int = 128,
+):
+    """Chunked-matmul streaming top-k (kernels/topk.py): O(chunk) memory
+    maximum-inner-product search. Returns ((Q, k) f32 scores, (Q, k) i32 ids);
+    same tie-break contract as ``repro.retrieval.topk``."""
+    return chunked_topk_pallas(
+        queries, items, k, exclude=exclude, item_chunk=item_chunk,
+        tile_q=tile_q, interpret=_interpret(),
+    )
 
 
 # ------------------------------------------------------------- row adagrad

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: chunked matmul + streaming top-k (retrieval hot path).
+
+Recall serving (U2I/UCF/ICF, paper §4.2) reduces to maximum-inner-product
+search: score every query row against an item table and keep the K best.
+Materializing the full (Q, I) similarity matrix is O(Q·I) HBM — 400 GB at
+1M items × 100k users — so this kernel streams the item table through VMEM
+in fixed chunks and carries a running (TQ, K) best-scores/best-ids state:
+memory is O(TQ · (K + chunk)), independent of the item count.
+
+Grid: (Q/TQ, I/chunk) with the chunk axis innermost. The output blocks for
+a query tile map to the same (TQ, K) slab for every chunk step, so Pallas
+keeps them VMEM-resident across the whole item sweep (the standard
+revisited-output accumulation pattern); they double as the running state —
+initialized at chunk 0, merged every step, final after the last chunk.
+
+Merge-order tie-break contract (shared with the ``lax`` reference path and
+the numpy oracle in ``repro.retrieval.topk``): on equal scores the lower
+item id wins. The concatenation [running best | current chunk] preserves it
+inductively — running entries hold earlier (smaller) ids and ``lax.top_k``
+prefers the first occurrence of a tied value.
+
+``exclude`` masking: each query row carries a padded id list (-1 = empty
+slot); a chunk column whose global item id appears in the row's list scores
+-inf. This is how retrieval drops a user's training history on-device.
+
+On CPU (this container) the kernel runs with interpret=True; ``lax.top_k``
+inside the body lowers to a sort on TPU Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# python float so the kernel body never captures a traced constant
+NEG_INF = float("-inf")
+
+
+def _topk_kernel(
+    q_ref,  # (TQ, d)
+    it_ref,  # (chunk, d)
+    ex_ref,  # (TQ, E) excluded item ids, -1 padded
+    os_ref,  # (TQ, K) running / final best scores
+    oi_ref,  # (TQ, K) running / final best item ids
+    *,
+    k: int,
+    chunk: int,
+    num_items: int,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, NEG_INF)
+        oi_ref[...] = jnp.full_like(oi_ref, -1)
+
+    q = q_ref[...].astype(jnp.float32)
+    it = it_ref[...].astype(jnp.float32)
+    scores = jnp.dot(q, it.T, preferred_element_type=jnp.float32)  # (TQ, chunk)
+    gid = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    scores = jnp.where(gid[None, :] < num_items, scores, NEG_INF)
+    ex = ex_ref[...]  # (TQ, E)
+    hit = (ex[:, :, None] == gid[None, None, :]).any(axis=1)  # (TQ, chunk)
+    scores = jnp.where(hit, NEG_INF, scores)
+
+    all_s = jnp.concatenate([os_ref[...], scores], axis=1)  # (TQ, K + chunk)
+    all_i = jnp.concatenate(
+        [oi_ref[...], jnp.broadcast_to(gid[None, :], scores.shape)], axis=1
+    )
+    best_s, pos = jax.lax.top_k(all_s, k)
+    os_ref[...] = best_s
+    oi_ref[...] = jnp.take_along_axis(all_i, pos, axis=1)
+
+
+def chunked_topk_pallas(
+    queries: jnp.ndarray,  # (Q, d)
+    items: jnp.ndarray,  # (I, d)
+    k: int,
+    exclude: jnp.ndarray = None,  # (Q, E) int32, -1 padded; None -> no masking
+    item_chunk: int = 1024,
+    tile_q: int = 128,
+    interpret: bool = False,
+):
+    """Streaming top-k MIPS: (Q, k) float32 scores + (Q, k) int32 item ids."""
+    Q, d = queries.shape
+    I = items.shape[0]
+    if not 0 < k <= I:
+        raise ValueError(f"k={k} must be in [1, num_items={I}]")
+    tq = min(tile_q, Q)
+    chunk = min(item_chunk, I)
+    Qp = -(-Q // tq) * tq
+    Ip = -(-I // chunk) * chunk
+    if Qp != Q:
+        queries = jnp.pad(queries, ((0, Qp - Q), (0, 0)))
+    if Ip != I:
+        items = jnp.pad(items, ((0, Ip - I), (0, 0)))
+    if exclude is None:
+        exclude = jnp.full((Qp, 1), -1, jnp.int32)
+    else:
+        exclude = jnp.asarray(exclude, jnp.int32)
+        if exclude.shape[0] != Qp:
+            exclude = jnp.pad(
+                exclude, ((0, Qp - exclude.shape[0]), (0, 0)), constant_values=-1
+            )
+    E = exclude.shape[1]
+    grid = (Qp // tq, Ip // chunk)
+    scores, ids = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, chunk=chunk, num_items=I),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i, c: (i, 0)),
+            pl.BlockSpec((chunk, d), lambda i, c: (c, 0)),
+            pl.BlockSpec((tq, E), lambda i, c: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i, c: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, c: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, items, exclude)
+    return scores[:Q], ids[:Q]

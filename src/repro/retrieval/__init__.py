@@ -1,0 +1,19 @@
+"""Device-side retrieval: the serving half of Graph4Rec's recall story.
+
+Training (PRs 1-3) produces embedding tables; this package turns them into
+served recommendations at scale:
+
+- ``topk``: exact maximum-inner-product search — a numpy brute-force oracle
+  plus chunked/streaming device paths (jitted ``lax.scan`` and a Pallas
+  kernel) whose memory is O(chunk), not O(items).
+- ``ivf``: inverted-file coarse partitioning for million-item tables —
+  spherical k-means cells, ``nprobe``-bounded search, recall traded for an
+  O(nlist / nprobe) compute reduction.
+
+``repro.core.recall`` builds the paper's ICF/UCF/U2I recall strategies on
+top of these primitives; ``benchmarks/bench_recall.py`` measures them.
+"""
+from repro.retrieval.topk import (
+    brute_force_topk, chunked_topk, pad_id_rows,
+)
+from repro.retrieval.ivf import IVFConfig, IVFIndex

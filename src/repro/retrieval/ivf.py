@@ -1,0 +1,181 @@
+"""IVF (inverted-file) coarse partitioning for million-item recall tables.
+
+Exact streaming top-k (retrieval/topk.py) is O(I) compute per query batch.
+For million-item corpora the standard serving trick is a coarse quantizer:
+cluster the item table into ``nlist`` cells (spherical k-means — the items
+are scored by inner product on normalized embeddings, so centroids live on
+the same sphere), store each cell's item ids as an inverted list, and at
+query time score only the ``nprobe`` nearest cells' lists. Compute and
+memory per query drop to O(nprobe · I / nlist) at a bounded recall cost;
+``nprobe == nlist`` degenerates to exhaustive search and returns exactly
+the oracle's ids (scores agree to float tolerance — candidates are scored
+by a gathered per-candidate dot rather than the dense matmul; tested).
+
+The inverted lists are stored as one padded (nlist, max_len) id matrix so
+the whole search — centroid scores, probe selection, candidate gather,
+scoring, exclusion masking, final top-k — is a single jitted program with
+static shapes. The same tie-break contract as retrieval/topk.py applies
+(equal scores -> lower item id wins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class IVFConfig:
+    nlist: int = 64  # coarse cells
+    nprobe: int = 8  # cells scored per query
+    kmeans_iters: int = 8
+    # k-means training subsample (0 = fit on every item). Million-item
+    # tables fit centroids on a sample, then assign the full table once.
+    train_size: int = 0
+    # Cap each inverted list at this multiple of the mean cell size by
+    # spilling a hot cell's weakest members to their next-best centroid.
+    # The padded (nlist, max_len) list matrix — and with it the per-query
+    # candidate gather, O(nprobe * max_len) — is then bounded even when
+    # k-means lands a skewed clustering; every item still lives in exactly
+    # one list, so nprobe == nlist stays exhaustive. 0 disables the cap.
+    balance_factor: float = 4.0
+    seed: int = 0
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
+def _ivf_search(queries, centroids, lists, items, exclude, *, k, nprobe):
+    q = queries.astype(jnp.float32)  # (Q, d)
+    cscores = q @ centroids.astype(jnp.float32).T  # (Q, nlist)
+    _, probes = jax.lax.top_k(cscores, nprobe)  # (Q, nprobe)
+    cand = lists[probes].reshape(q.shape[0], -1)  # (Q, nprobe * max_len)
+    vecs = items[jnp.maximum(cand, 0)].astype(jnp.float32)  # (Q, C, d)
+    scores = jnp.einsum("qd,qcd->qc", q, vecs)
+    scores = jnp.where(cand >= 0, scores, -jnp.inf)
+    hit = (exclude[:, :, None] == cand[:, None, :]).any(axis=1)
+    scores = jnp.where(hit, -jnp.inf, scores)
+    # order candidates by ascending item id before top_k so the shared
+    # lower-id-wins tie-break holds regardless of probe order; -inf pads
+    # sort to the end and can never displace a real candidate
+    order = jnp.argsort(jnp.where(cand >= 0, cand, jnp.iinfo(jnp.int32).max))
+    cand = jnp.take_along_axis(cand, order, axis=1)
+    scores = jnp.take_along_axis(scores, order, axis=1)
+    best_s, pos = jax.lax.top_k(scores, k)
+    return best_s, jnp.take_along_axis(cand, pos, axis=1)
+
+
+def _spill_hot_cells(
+    norm: np.ndarray, cent: np.ndarray, assign: np.ndarray, cap: int
+) -> np.ndarray:
+    """Move the weakest members of over-``cap`` cells to their next-best
+    centroid with room. Every item keeps exactly one cell (exhaustive
+    probing stays exact); cap * nlist >= num_items whenever the cap is at
+    least the mean cell size, so a slot always exists."""
+    assign = assign.copy()
+    counts = np.bincount(assign, minlength=len(cent))
+    for c in np.flatnonzero(counts > cap):
+        members = np.flatnonzero(assign == c)
+        affinity = norm[members] @ cent[c]
+        spill = members[np.argsort(affinity)[: len(members) - cap]]
+        prefs = np.argsort(-(norm[spill] @ cent.T), axis=1)
+        for item, pref in zip(spill, prefs):
+            for cand in pref:
+                if counts[cand] < cap:
+                    assign[item] = cand
+                    counts[cand] += 1
+                    counts[c] -= 1
+                    break
+    return assign
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    """Built coarse index over one item table (ids are row indices)."""
+
+    config: IVFConfig
+    centroids: np.ndarray  # (nlist, d) float32
+    lists: np.ndarray  # (nlist, max_len) int32, -1 padded
+    items: np.ndarray  # (I, d) float32 — the indexed table
+
+    @classmethod
+    def build(cls, items: np.ndarray, config: IVFConfig = IVFConfig()) -> "IVFIndex":
+        it = np.asarray(items, dtype=np.float32)
+        I, d = it.shape
+        nlist = min(config.nlist, I)
+        rng = np.random.default_rng(config.seed)
+        norm = it / np.maximum(np.linalg.norm(it, axis=1, keepdims=True), 1e-12)
+        train = norm
+        if config.train_size and config.train_size < I:
+            train = norm[
+                rng.choice(I, size=max(config.train_size, nlist), replace=False)
+            ]
+        cent = train[rng.choice(len(train), size=nlist, replace=False)]
+        for _ in range(max(1, config.kmeans_iters)):
+            t_assign = np.argmax(train @ cent.T, axis=1)
+            for c in range(nlist):
+                members = train[t_assign == c]
+                if len(members):
+                    m = members.sum(axis=0)
+                    cent[c] = m / max(np.linalg.norm(m), 1e-12)
+                else:  # re-seed empty cells so every list stays non-trivial
+                    cent[c] = train[rng.integers(0, len(train))]
+        # one full-table assignment pass (chunked: O(chunk x nlist) memory)
+        assign = np.empty(I, dtype=np.int64)
+        for lo in range(0, I, 65536):
+            assign[lo : lo + 65536] = np.argmax(norm[lo : lo + 65536] @ cent.T, axis=1)
+        if config.balance_factor:
+            cap = max(1, int(np.ceil(config.balance_factor * I / nlist)))
+            assign = _spill_hot_cells(norm, cent, assign, cap)
+        counts = np.bincount(assign, minlength=nlist)
+        max_len = max(1, int(counts.max()))
+        lists = np.full((nlist, max_len), -1, dtype=np.int32)
+        for c in range(nlist):
+            members = np.flatnonzero(assign == c)
+            lists[c, : len(members)] = members
+        return cls(
+            config=dataclasses.replace(config, nlist=nlist),
+            centroids=cent, lists=lists, items=it,
+        )
+
+    @property
+    def candidates_per_query(self) -> int:
+        return min(self.config.nprobe, self.config.nlist) * self.lists.shape[1]
+
+    def search(
+        self,
+        queries: np.ndarray,
+        k: int,
+        exclude: Optional[np.ndarray] = None,
+        nprobe: Optional[int] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """((Q, k) f32 scores, (Q, k) i32 ids); unfilled slots are (-inf, -1).
+
+        ``k`` may exceed the probed candidate count only up to the table
+        size; slots beyond the candidates surface as id -1.
+        """
+        q = np.asarray(queries, dtype=np.float32)
+        nprobe = min(
+            self.config.nlist, self.config.nprobe if nprobe is None else nprobe
+        )
+        if not 0 < k <= self.items.shape[0]:
+            raise ValueError(f"k={k} must be in [1, {self.items.shape[0]}]")
+        kk = min(k, nprobe * self.lists.shape[1])
+        ex = (
+            jnp.full((q.shape[0], 1), -1, jnp.int32)
+            if exclude is None
+            else jnp.asarray(np.asarray(exclude, dtype=np.int32))
+        )
+        s, i = _ivf_search(
+            jnp.asarray(q), jnp.asarray(self.centroids), jnp.asarray(self.lists),
+            jnp.asarray(self.items), ex, k=kk, nprobe=nprobe,
+        )
+        s, i = np.asarray(s), np.asarray(i)
+        # shared filler contract: a -inf slot never carries a real id
+        i = np.where(np.isneginf(s), -1, i)
+        if kk < k:
+            s = np.pad(s, ((0, 0), (0, k - kk)), constant_values=-np.inf)
+            i = np.pad(i, ((0, 0), (0, k - kk)), constant_values=-1)
+        return s, i

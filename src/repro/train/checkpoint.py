@@ -26,12 +26,23 @@ def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
     return out
 
 
-def save(path: str, tree: Any) -> None:
+def normalize_path(path: str) -> str:
+    """The on-disk name for ``path``: np.savez appends ``.npz`` when the
+    suffix is missing, so save and load must agree on the same rule."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def save(path: str, tree: Any) -> str:
+    path = normalize_path(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **_flatten(tree))
+    return path
 
 
 def load_flat(path: str) -> Dict[str, np.ndarray]:
+    # accept both the name the caller passed to save() and the actual file
+    if not os.path.exists(path):
+        path = normalize_path(path)
     with np.load(path) as z:
         return {k: z[k] for k in z.files}
 

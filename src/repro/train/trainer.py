@@ -54,7 +54,18 @@ class TrainerConfig:
     dense_lr: float = 1e-3
     eval_every: int = 0  # 0 -> only at end
     eval_top_k: int = 100
-    eval_max_users: int = 256
+    # Similar-neighbor pool size for the ICF/UCF strategies (paper §4.2) —
+    # previously hard-coded inside core/recall.py.
+    eval_top_n: int = 20
+    # 0 evaluates EVERY held-out user (no subsampling — the device retrieval
+    # path makes that affordable); >0 restores the old capped behavior.
+    eval_max_users: int = 0
+    # Retrieval implementation for evaluate(): "device" (chunked streaming
+    # top-k, exact), "ivf" (coarse-partition approximate), or "bruteforce"
+    # (numpy oracle — the seed path, O(U·I) memory).
+    eval_method: str = "device"
+    # Fixed chunk width for full-graph inference (infer.embed_all_nodes).
+    eval_batch_size: int = 1024
     eval_at_end: bool = True
     log_every: int = 50
     seed: int = 0
@@ -363,17 +374,25 @@ class Graph4RecTrainer:
         self.close()
 
     def evaluate(self, params, split: str = "val") -> Dict[str, float]:
+        """Full recall evaluation: full-graph inference (repro.infer) +
+        device-side retrieval (repro.core.recall / repro.retrieval). Every
+        knob the old path hard-coded (top_n, user subsampling, method) is
+        TrainerConfig-exposed; by default every held-out user is scored."""
+        from repro.infer import embed_all_nodes
+
         ds = self.dataset
         rng = np.random.default_rng(self.cfg.seed + 7)
-        all_emb = model_lib.encode_all_nodes(
-            params, self.model_cfg, self.engine, rng, ds.graph
+        all_emb = embed_all_nodes(
+            params, self.model_cfg, self.engine, ds.graph,
+            batch_size=self.cfg.eval_batch_size, rng=rng,
         )
         user_emb = all_emb[: ds.num_users]
         item_emb = all_emb[ds.num_users : ds.num_users + ds.num_items]
         eval_pairs = ds.val_pairs if split == "val" else ds.test_pairs
         return evaluate_recall(
             user_emb, item_emb, self._train_pairs, eval_pairs,
-            top_k=self.cfg.eval_top_k, max_users=self.cfg.eval_max_users,
+            top_k=self.cfg.eval_top_k, top_n=self.cfg.eval_top_n,
+            max_users=self.cfg.eval_max_users, method=self.cfg.eval_method,
         )
 
     def _device_batches(
