@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-throughput bench-step bench-engine bench-recall
+.PHONY: test test-fast bench-throughput bench-step bench-engine bench-recall bench-walk
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -19,3 +19,6 @@ bench-engine:
 
 bench-recall:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_recall.py --quick
+
+bench-walk:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --walk --full

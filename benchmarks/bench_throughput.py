@@ -400,6 +400,111 @@ def engine_service_bench(quick: bool = True, results: Dict = None) -> None:
         results["engine_service"] = out
 
 
+def walk_fusion_bench(quick: bool = True, results: Dict = None) -> None:
+    """Fused on-device walk->pair->ego sampling vs the host pipeline
+    (`make bench-walk`).
+
+    Measures the sampling front end alone — the stage the fused backend
+    moves onto the device: host arm = ``SamplePipeline.batches`` against the
+    in-process partitioned engine (the prefetch producer's exact workload),
+    fused arm = the jitted ``FusedSampler.sample`` program (walk, Pallas
+    window-pair gather, ego gather, one dispatch per batch). Arms are
+    measured interleaved and speedups are per-rep ratios (median reported)
+    to tame shared-host noise. Also records end-to-end trainer pairs/sec
+    with ``sampling_backend="fused"`` vs "host" for the GNN model
+    (informational: with host prefetching the grad step overlaps sampling,
+    so the end-to-end CPU ratio is far below the sampling-stage ratio).
+    """
+    import jax as _jax
+    import numpy as np
+
+    from repro.graph import DistributedGraphEngine
+    from repro.sampling import EgoConfig, PairConfig, PipelineConfig, SamplePipeline
+    from repro.sampling.fused import FusedSampler, fused_eligibility
+    from repro.walk import WalkConfig
+
+    ds = dataset("toy" if quick else "rec15")
+    g = ds.graph
+    from benchmarks.common import RELS
+
+    batch_pairs = 512
+    nb = 20 if quick else 40
+    reps = 5
+    out: Dict = {
+        "dataset": ds.spec.name, "batch_pairs": batch_pairs, "batches": nb,
+    }
+    arms = (
+        ("walk-based", None),
+        ("gnn", EgoConfig(relations=list(RELS), fanouts=[4, 3])),
+    )
+    for name, ego in arms:
+        pc = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+            pair=PairConfig(win_size=2), ego=ego,
+            batch_pairs=batch_pairs, walks_per_round=128,
+        )
+        eng = DistributedGraphEngine(g, num_partitions=4)
+        ok, why = fused_eligibility(g, pc)
+        assert ok, f"bench graph must fit the padded-adjacency budget: {why}"
+        fs = FusedSampler(g, pc)
+        sample = _jax.jit(fs.sample)
+        # keys batched up front: a per-batch eager fold_in would cost more
+        # than the fused program itself
+        keys = _jax.random.split(_jax.random.PRNGKey(0), nb)
+        _jax.block_until_ready(sample(keys[0]))  # compile
+        list(SamplePipeline(eng, pc, seed=0).batches(2))  # warm host caches
+
+        def host_run() -> float:
+            pipe = SamplePipeline(eng, pc, seed=0)
+            t0 = time.perf_counter()
+            list(pipe.batches(nb))
+            return nb * batch_pairs / (time.perf_counter() - t0)
+
+        def fused_run() -> float:
+            t0 = time.perf_counter()
+            for i in range(nb):
+                got = sample(keys[i])
+            _jax.block_until_ready(got)
+            return nb * batch_pairs / (time.perf_counter() - t0)
+
+        host_pps, fused_pps, ratios = [], [], []
+        for _ in range(reps):  # interleaved: both arms see the same machine
+            h = host_run()
+            f = fused_run()
+            host_pps.append(h)
+            fused_pps.append(f)
+            ratios.append(f / h)
+        med = sorted(ratios)[len(ratios) // 2]
+        emit(f"walk_fusion/{name}/host", 0.0,
+             f"pairs_per_sec={max(host_pps):.0f}")
+        emit(f"walk_fusion/{name}/fused", 0.0,
+             f"pairs_per_sec={max(fused_pps):.0f}")
+        emit(f"walk_fusion/{name}/speedup", 0.0, f"speedup_median={med:.2f}x")
+        out[name] = {
+            "pairs_per_sec_host": round(max(host_pps), 1),
+            "pairs_per_sec_fused": round(max(fused_pps), 1),
+            "speedup_median": round(med, 3),
+        }
+
+    # ---- end-to-end trainer pairs/sec per sampling backend (informational)
+    steps = 40 if quick else 100
+    pipe: Dict[str, float] = {}
+    for backend in ("host", "fused"):
+        tr = trainer(
+            ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
+            batch_pairs=batch_pairs, sampling_backend=backend,
+        )
+        tr.train()  # compile + warm
+        best = min(tr.train().wall_time_s for _ in range(2))
+        pipe[backend] = steps * batch_pairs / best
+        emit(f"walk_fusion/pipeline_{backend}", 0.0,
+             f"pairs_per_sec={pipe[backend]:.0f}")
+    out["pipeline_pairs_per_sec"] = {m: round(v, 1) for m, v in pipe.items()}
+    out["pipeline_fused_speedup"] = round(pipe["fused"] / pipe["host"], 3)
+    if results is not None:
+        results["walk_fusion"] = out
+
+
 def kernel_micro(quick: bool = True, results: Dict = None) -> None:
     from repro.kernels import ops
 
@@ -438,6 +543,7 @@ def run(quick: bool = True) -> Dict:
     pipeline_throughput(quick, results)
     sparse_step_bench(quick, results)
     engine_service_bench(quick, results)
+    walk_fusion_bench(quick, results)
     kernel_micro(quick, results)
     with open(_JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -469,6 +575,11 @@ def run_engine_only(quick: bool = True) -> Dict:
     return _run_one_arm(engine_service_bench, quick)
 
 
+def run_walk_only(quick: bool = True) -> Dict:
+    """`make bench-walk`: just the fused-sampling arm, merged into the JSON."""
+    return _run_one_arm(walk_fusion_bench, quick)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     grp = ap.add_mutually_exclusive_group()
@@ -480,11 +591,15 @@ if __name__ == "__main__":
                      help="run only the sparse-vs-dense grad-step arm")
     arm.add_argument("--engine", action="store_true",
                      help="run only the inproc-vs-mp graph-service arm")
+    arm.add_argument("--walk", action="store_true",
+                     help="run only the fused-vs-host sampling arm")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.step:
         run_step_only(quick=not args.full)
     elif args.engine:
         run_engine_only(quick=not args.full)
+    elif args.walk:
+        run_walk_only(quick=not args.full)
     else:
         run(quick=not args.full)

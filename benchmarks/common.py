@@ -46,6 +46,7 @@ def trainer(
     sparse_updates: bool = True,
     engine_backend: str = "inproc",
     num_engine_workers: int = 2,
+    sampling_backend: str = "host",
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -89,7 +90,8 @@ def trainer(
                       eval_at_end=eval_at_end,
                       engine_backend=engine_backend,
                       num_engine_workers=num_engine_workers,
-                      num_engine_partitions=num_partitions),
+                      num_engine_partitions=num_partitions,
+                      sampling_backend=sampling_backend),
     )
 
 

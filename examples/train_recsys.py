@@ -43,6 +43,11 @@ def main() -> None:
     ap.add_argument("--engine-backend", default="inproc", choices=["inproc", "mp"],
                     help="'mp' serves partitions from shared-memory worker "
                          "processes (graph/service) instead of in-process")
+    ap.add_argument("--sampling-backend", default="host",
+                    choices=["host", "fused"],
+                    help="'fused' runs walk->pair->ego as one jitted device "
+                         "program when the graph fits the padded-adjacency "
+                         "budget (falls back to 'host' otherwise)")
     ap.add_argument("--engine-workers", type=int, default=2,
                     help="worker processes for --engine-backend=mp")
     ap.add_argument("--warm-start", default=None, help="npz of pre-trained tables")
@@ -111,6 +116,7 @@ def main() -> None:
                       seed=args.seed, engine_backend=args.engine_backend,
                       num_engine_workers=args.engine_workers,
                       num_engine_partitions=args.partitions,
+                      sampling_backend=args.sampling_backend,
                       eval_method=args.eval_recall,
                       eval_max_users=args.eval_max_users),
     )

@@ -214,17 +214,24 @@ class HeteroGraph:
         Used by the fully-jittable on-device sampler: wide rows are truncated
         (uniform subsample), short rows padded. Returns (adj, degree).
         """
+        from repro.utils.ragged import ragged_row_offsets
+
         csr = self.relations[relation]
         adj = np.full((self.num_nodes, max_degree), pad_id, dtype=np.int64)
         degs = csr.degrees()
-        for v in range(self.num_nodes):
-            nbrs = csr.neighbors(v)
-            if len(nbrs) == 0:
-                continue
-            if len(nbrs) > max_degree:
-                nbrs = np.random.default_rng(v).choice(nbrs, max_degree, replace=False)
-            adj[v, : len(nbrs)] = nbrs
-        return adj, np.minimum(degs, max_degree).astype(np.int64)
+        # rows that fit: one vectorized ragged-to-padded scatter
+        clipped = np.minimum(degs, max_degree).astype(np.int64)
+        starts = np.asarray(csr.indptr[:-1], dtype=np.int64)
+        if clipped.sum():
+            row_of, col = ragged_row_offsets(clipped)
+            adj[row_of, col] = csr.indices[starts[row_of] + col]
+        # over-wide rows: per-row uniform subsample without replacement,
+        # deterministically keyed by the node id (stable across calls)
+        for v in np.flatnonzero(degs > max_degree):
+            adj[v] = np.random.default_rng(v).choice(
+                csr.neighbors(v), max_degree, replace=False
+            )
+        return adj, clipped
 
 
 def _csr_from_pairs(num_nodes: int, src: np.ndarray, dst: np.ndarray) -> CSR:

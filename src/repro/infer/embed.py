@@ -49,7 +49,13 @@ def embed_all_nodes(
     thread their own stream (the trainer's evaluate).
     """
     N = graph.num_nodes
-    batch_size = max(1, min(int(batch_size), N))
+    batch_size = int(batch_size)
+    if batch_size <= 0:
+        raise ValueError(
+            f"batch_size must be positive, got {batch_size} (a non-positive "
+            "chunk width would loop forever or silently embed nothing)"
+        )
+    batch_size = min(batch_size, N)
     rng = rng if rng is not None else np.random.default_rng(seed)
     bspecs, vspecs = model_lib._split_slot_specs(cfg)
     slot_counts = model_lib.slot_count_arrays(graph, cfg) if bspecs else None

@@ -21,6 +21,7 @@ from repro.kernels.inbatch_loss import inbatch_loss_rows_pallas
 from repro.kernels.row_adagrad import row_adagrad_scatter_pallas
 from repro.kernels.seg_aggr import seg_aggr_pallas
 from repro.kernels.topk import chunked_topk_pallas
+from repro.kernels.window_pairs import window_pair_ids_pallas
 
 
 def _interpret() -> bool:
@@ -43,6 +44,18 @@ def streaming_topk(
         queries, items, k, exclude=exclude, item_chunk=item_chunk,
         tile_q=tile_q, interpret=_interpret(),
     )
+
+
+# ------------------------------------------------------------ window pairs
+def window_pair_ids(paths: jnp.ndarray, positions):
+    """(B, L) walk paths -> ((B, npos) src, (B, npos) dst) skip-gram pairs.
+
+    ``positions`` is the static (src_col, dst_col) table from
+    ``sampling.pairs.window_positions``; pairs touching a PAD node come back
+    with BOTH sides PAD. Called from inside the fused sampler's jitted
+    program, so no jit wrapper here.
+    """
+    return window_pair_ids_pallas(paths, positions, interpret=_interpret())
 
 
 # ------------------------------------------------------------- row adagrad

@@ -36,6 +36,20 @@ def seg_aggr_ref(
     raise ValueError(mode)
 
 
+# ---------------------------------------------------------- window pairs
+def window_pair_ids_ref(
+    paths: jnp.ndarray,  # (B, L) int paths, PAD = -1
+    positions,  # static (npos, 2) (src_col, dst_col) table
+):
+    """Skip-gram pair gather oracle -> ((B, npos) src, (B, npos) dst)."""
+    pos = np.asarray(positions, dtype=np.int64).reshape(-1, 2)
+    paths = paths.astype(jnp.int32)
+    src = paths[:, pos[:, 0]]
+    dst = paths[:, pos[:, 1]]
+    valid = (src != -1) & (dst != -1)
+    return jnp.where(valid, src, -1), jnp.where(valid, dst, -1)
+
+
 # -------------------------------------------------------------- inbatch loss
 def inbatch_loss_ref(
     h_src: jnp.ndarray, h_dst: jnp.ndarray, temperature: float = 1.0

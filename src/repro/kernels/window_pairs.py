@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: skip-gram window-pair extraction from walk paths.
+
+The pair stage of the fused on-device sampler (sampling/fused.py): a batch
+of walks (B, L) becomes, per walk, the fixed set of in-window (src, dst)
+column pairs (``sampling.pairs.window_positions``). Because the position
+table is static, the whole stage is a gather of 2*npos fixed columns plus a
+joint PAD-validity mask — pure VPU work on an int tile, no dynamic shapes.
+
+Output layout: (B, npos) src ids and (B, npos) dst ids, with BOTH set to
+PAD wherever either endpoint of the pair is PAD — so downstream selection
+needs a single ``src != PAD`` test per candidate.
+
+Tiling: grid (B/TB,); each step holds the (TB, L) path tile and the two
+(TB, npos) output tiles in VMEM. L and npos are small (walk_len <= 32,
+npos = O(walk_len * win)), so a generous TB still sits far under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD = -1
+
+
+def _window_pair_kernel(p_ref, src_ref, dst_ref, *, spos, dpos):
+    x = p_ref[...]  # (TB, L) int32
+    src = jnp.stack([x[:, c] for c in spos], axis=1)  # (TB, npos)
+    dst = jnp.stack([x[:, c] for c in dpos], axis=1)
+    valid = (src != PAD) & (dst != PAD)
+    src_ref[...] = jnp.where(valid, src, PAD)
+    dst_ref[...] = jnp.where(valid, dst, PAD)
+
+
+def window_pair_ids_pallas(
+    paths: jnp.ndarray,  # (B, L) int32 walk paths, PAD suffix after dead ends
+    positions: Sequence[Tuple[int, int]],  # static (src_col, dst_col) table
+    tile_b: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, L) paths -> ((B, npos) src ids, (B, npos) dst ids), PAD-masked."""
+    B, L = paths.shape
+    spos = tuple(int(p[0]) for p in positions)
+    dpos = tuple(int(p[1]) for p in positions)
+    npos = len(spos)
+    paths = paths.astype(jnp.int32)
+    tb = min(tile_b, B)
+    Bp = -(-B // tb) * tb
+    if Bp != B:  # PAD rows produce PAD pairs and are sliced off below
+        paths = jnp.pad(paths, ((0, Bp - B), (0, 0)), constant_values=PAD)
+    out_shape = jax.ShapeDtypeStruct((Bp, npos), jnp.int32)
+    src, dst = pl.pallas_call(
+        functools.partial(_window_pair_kernel, spos=spos, dpos=dpos),
+        grid=(Bp // tb,),
+        in_specs=[pl.BlockSpec((tb, L), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tb, npos), lambda i: (i, 0)),
+            pl.BlockSpec((tb, npos), lambda i: (i, 0)),
+        ],
+        out_shape=[out_shape, out_shape],
+        interpret=interpret,
+    )(paths)
+    return src[:B], dst[:B]

@@ -43,7 +43,21 @@ class IVFConfig:
     # k-means lands a skewed clustering; every item still lives in exactly
     # one list, so nprobe == nlist stays exhaustive. 0 disables the cap.
     balance_factor: float = 4.0
+    # Row-chunk width of the full-table assignment pass (memory bound:
+    # O(assign_chunk x nlist) scores live at once).
+    assign_chunk: int = 65536
     seed: int = 0
+
+    def validate(self) -> None:
+        if self.nlist <= 0:
+            raise ValueError(f"nlist must be positive, got {self.nlist}")
+        if self.nprobe <= 0:
+            raise ValueError(f"nprobe must be positive, got {self.nprobe}")
+        if self.assign_chunk <= 0:
+            raise ValueError(
+                f"assign_chunk must be positive, got {self.assign_chunk} "
+                "(a non-positive chunk width would silently assign nothing)"
+            )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe"))
@@ -102,6 +116,7 @@ class IVFIndex:
 
     @classmethod
     def build(cls, items: np.ndarray, config: IVFConfig = IVFConfig()) -> "IVFIndex":
+        config.validate()
         it = np.asarray(items, dtype=np.float32)
         I, d = it.shape
         nlist = min(config.nlist, I)
@@ -123,9 +138,10 @@ class IVFIndex:
                 else:  # re-seed empty cells so every list stays non-trivial
                     cent[c] = train[rng.integers(0, len(train))]
         # one full-table assignment pass (chunked: O(chunk x nlist) memory)
+        step = config.assign_chunk
         assign = np.empty(I, dtype=np.int64)
-        for lo in range(0, I, 65536):
-            assign[lo : lo + 65536] = np.argmax(norm[lo : lo + 65536] @ cent.T, axis=1)
+        for lo in range(0, I, step):
+            assign[lo : lo + step] = np.argmax(norm[lo : lo + step] @ cent.T, axis=1)
         if config.balance_factor:
             cap = max(1, int(np.ceil(config.balance_factor * I / nlist)))
             assign = _spill_hot_cells(norm, cent, assign, cap)
@@ -157,6 +173,8 @@ class IVFIndex:
         size; slots beyond the candidates surface as id -1.
         """
         q = np.asarray(queries, dtype=np.float32)
+        if nprobe is not None and nprobe <= 0:
+            raise ValueError(f"nprobe must be positive, got {nprobe}")
         nprobe = min(
             self.config.nlist, self.config.nprobe if nprobe is None else nprobe
         )

@@ -150,6 +150,13 @@ def chunked_topk(
     Q, I = q.shape[0], it.shape[0]
     if not 0 < k <= I:
         raise ValueError(f"k={k} must be in [1, num_items={I}]")
+    if item_chunk <= 0:
+        raise ValueError(f"item_chunk must be positive, got {item_chunk}")
+    if query_chunk < 0:
+        raise ValueError(
+            f"query_chunk must be >= 0 (0 disables query chunking), "
+            f"got {query_chunk}"
+        )
     if exclude is not None:
         exclude = np.asarray(exclude, dtype=np.int32)
 

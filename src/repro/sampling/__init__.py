@@ -1,3 +1,8 @@
 from repro.sampling.ego import EgoConfig, EgoBatch, sample_ego_batch, PAD
-from repro.sampling.pairs import PairConfig, window_pairs, pairs_to_nodes, sample_random_negatives
-from repro.sampling.pipeline import PipelineConfig, SamplePipeline, TrainBatch
+from repro.sampling.pairs import (
+    PairConfig, window_pairs, window_positions, pairs_to_nodes,
+    sample_random_negatives,
+)
+from repro.sampling.pipeline import (
+    PipelineConfig, SamplePipeline, TrainBatch, make_train_sampler,
+)

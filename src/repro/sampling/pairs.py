@@ -24,6 +24,24 @@ class PairConfig:
     num_negatives: int = 5  # per positive, random mode only
 
 
+def window_positions(walk_len: int, win_size: int) -> np.ndarray:
+    """Static (npos, 2) table of in-window (src_col, dst_col) position pairs.
+
+    The skip-gram window over a length-``walk_len`` path, independent of the
+    path contents: src != dst, |src - dst| <= win_size. Shared by the host
+    ``window_pairs`` and the fused on-device sampler (whose pair stage is a
+    fixed gather of exactly these columns).
+    """
+    rows = []
+    for d in range(1, win_size + 1):
+        if d >= walk_len:
+            break
+        for s in range(0, walk_len - d):
+            rows.append((s, s + d))
+            rows.append((s + d, s))
+    return np.array(rows, dtype=np.int64).reshape(-1, 2)
+
+
 def window_pairs(paths: np.ndarray, win_size: int) -> np.ndarray:
     """All (src_pos, dst_pos) index pairs within the window, per path.
 
@@ -33,15 +51,7 @@ def window_pairs(paths: np.ndarray, win_size: int) -> np.ndarray:
     per-position ego graphs (§3.6 order exchange).
     """
     B, L = paths.shape
-    rows = []
-    for d in range(1, win_size + 1):
-        if d >= L:
-            break
-        src = np.arange(0, L - d)
-        for s in src:
-            rows.append((s, s + d))
-            rows.append((s + d, s))
-    pos = np.array(rows, dtype=np.int64)  # (L-window combos, 2)
+    pos = window_positions(L, win_size)  # (L-window combos, 2)
     # cross with batch rows, filter PAD
     path_idx = np.repeat(np.arange(B, dtype=np.int64), len(pos))
     sc = np.tile(pos[:, 0], B)

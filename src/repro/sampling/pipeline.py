@@ -72,6 +72,41 @@ class PipelineConfig:
     walks_per_round: int = 64
 
 
+def make_train_sampler(
+    engine,
+    config: "PipelineConfig",
+    backend: str = "host",
+    seed: int = 0,
+    value_slots=(),
+    bag_slots=(),
+    fused_cfg=None,
+    bag_counts=None,
+):
+    """Sampling-backend factory for the trainer.
+
+    ``backend="host"`` returns the streaming ``SamplePipeline`` over the
+    given engine (any engine backend: HeteroGraph, DistributedGraphEngine,
+    or the mp GraphClient). ``backend="fused"`` returns a
+    ``sampling.fused.FusedSampler`` built over the engine's graph — the
+    whole walk->pair->ego front end as one jittable device program; callers
+    should gate it with ``fused.fused_eligibility`` first (the trainer
+    does, falling back to "host" with a warning).
+    """
+    if backend == "host":
+        return SamplePipeline(engine, config, seed=seed)
+    if backend == "fused":
+        from repro.sampling.fused import FusedConfig, FusedSampler
+
+        graph = engine.graph if hasattr(engine, "graph") else engine
+        return FusedSampler(
+            graph, config,
+            value_slots=value_slots, bag_slots=bag_slots,
+            fused=fused_cfg if fused_cfg is not None else FusedConfig(),
+            bag_counts=bag_counts,
+        )
+    raise ValueError(f"unknown sampling backend {backend!r}")
+
+
 class SamplePipeline:
     """Streams TrainBatches from a graph engine. CPU-side, feeds the device."""
 

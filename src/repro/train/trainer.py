@@ -7,7 +7,11 @@ RQ benchmark.
 
 Throughput design: host-side sampling + device-batch conversion run in a
 bounded background prefetch thread (``prefetch_batches`` deep), overlapping
-with the jitted grad step, and the loop never forces a device sync per step
+with the jitted grad step — or, with ``sampling_backend="fused"`` on an
+eligible graph, sampling moves onto the device entirely: walk, window-pair
+and ego gather run inside the jitted grad step (sampling/fused.py) and the
+prefetcher becomes a no-op pass-through. The loop never forces a device
+sync per step
 (losses stay on device until the end, drained in windows so long runs don't
 pin unbounded device buffers; set ``sync_every_step=True`` for the strictly
 serial sample->sync->step loop, e.g. as a benchmark baseline).
@@ -40,7 +44,10 @@ from repro.core.recall import evaluate_recall
 from repro.embedding import optimizer as emb_opt
 from repro.embedding import table as emb
 from repro.graph.generator import RecsysDataset
-from repro.sampling.pipeline import PipelineConfig, SamplePipeline
+from repro.sampling.fused import FusedConfig, fused_eligibility
+from repro.sampling.pipeline import (
+    PipelineConfig, SamplePipeline, make_train_sampler,
+)
 from repro.train import optimizer as opt_lib
 from repro.utils import get_logger
 
@@ -104,6 +111,24 @@ class TrainerConfig:
     # (the memory-frugal setup: no in-process partition copies are ever
     # built). Ignored when an engine is passed — its partitioning wins.
     num_engine_partitions: int = 4
+    # Sampling front end. "host" streams batches from the NumPy pipeline
+    # (walker + ego sampler against the graph engine, prefetch thread,
+    # sparse dedup); "fused" runs walk->pair->ego as ONE jitted device
+    # program (sampling/fused.py) inlined into the grad step — zero host
+    # work per step — whenever the padded device tables fit
+    # ``fused_budget_mb`` (otherwise it falls back to "host" with a
+    # warning). Fused mode bypasses the prefetcher (nothing to prefetch)
+    # and always applies the dense-table update — numerically identical
+    # to the sparse path's row-wise AdaGrad (tests/test_sparse_updates).
+    sampling_backend: str = "host"  # host | fused
+    # Padded-adjacency width for the fused sampler's device tables.
+    fused_max_degree: int = 32
+    # Device-table budget (MiB) for the fused eligibility check.
+    fused_budget_mb: float = 256.0
+    # Candidate pairs generated per emitted pair in fused mode.
+    fused_oversample: float = 2.0
+    # Route the fused pair gather through the Pallas window-pair kernel.
+    fused_use_kernel_pairs: bool = True
 
 
 @dataclasses.dataclass
@@ -284,6 +309,42 @@ class Graph4RecTrainer:
             )
             else None
         )
+        # Fused device sampling: build the sampler (and the combined
+        # sample+grad step) only when the graph passes the memory gate.
+        self._fused_sampler = None
+        self._fused_step = None
+        if cfg.sampling_backend == "fused":
+            fused_cfg = FusedConfig(
+                max_degree=cfg.fused_max_degree,
+                budget_mb=cfg.fused_budget_mb,
+                oversample=cfg.fused_oversample,
+                use_kernel_pairs=cfg.fused_use_kernel_pairs,
+            )
+            bspecs = model_lib.bag_slot_specs(self.model_cfg)
+            vspecs = model_lib.value_slot_specs(self.model_cfg)
+            ok, why = fused_eligibility(
+                dataset.graph, pipe_cfg, vspecs, bspecs, fused_cfg
+            )
+            if ok:
+                self._fused_sampler = make_train_sampler(
+                    dataset.graph, pipe_cfg, backend="fused",
+                    value_slots=vspecs, bag_slots=bspecs, fused_cfg=fused_cfg,
+                    bag_counts=(
+                        model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
+                        if bspecs else None
+                    ),
+                )
+                self._fused_step = jax.jit(
+                    self._make_fused_step(), donate_argnums=(0, 1)
+                )
+                log.info("fused sampling backend active (%s)", why)
+            else:
+                log.warning(
+                    "sampling_backend='fused' ineligible: %s; falling back "
+                    "to the host pipeline", why,
+                )
+        elif cfg.sampling_backend != "host":
+            raise ValueError(f"unknown sampling_backend {cfg.sampling_backend!r}")
         self._grad_step = jax.jit(self._make_grad_step())
         self._sparse_step = jax.jit(
             self._make_sparse_step(), donate_argnums=(0, 1)
@@ -297,6 +358,25 @@ class Graph4RecTrainer:
         mc = self.model_cfg
 
         def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model_lib.loss_fn)(params, mc, batch)
+            updates, opt_state = self.opt.update(grads, opt_state, params)
+            params = opt_lib.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return step
+
+    def _make_fused_step(self):
+        """Sampling fused INTO the jitted grad step (sampling_backend=
+        "fused"): the batch is produced on device from the PRNG key alone,
+        so one dispatch per step covers walk, pair, ego, forward, backward
+        and the update — the host only advances the key. Tables update
+        through the dense full-table rule (identical numerics to the
+        sparse path's row-wise AdaGrad) under buffer donation."""
+        mc = self.model_cfg
+        sampler = self._fused_sampler
+
+        def step(params, opt_state, key):
+            batch = sampler.sample(key)
             loss, grads = jax.value_and_grad(model_lib.loss_fn)(params, mc, batch)
             updates, opt_state = self.opt.update(grads, opt_state, params)
             params = opt_lib.apply_updates(params, updates)
@@ -414,10 +494,29 @@ class Graph4RecTrainer:
                 )
             yield dev, len(batch.src_ids)
 
+    def _fused_batch_iter(self) -> Iterator[Tuple[jax.Array, int]]:
+        """Fused mode's stand-in for the host batch stream: the "batch" fed
+        to the jitted step is just the per-step PRNG key (sampling happens
+        inside the step), so the prefetcher has nothing to do and is
+        bypassed entirely — a no-op pass-through."""
+        # one batched split up front: per-step eager fold_in dispatches
+        # would cost more than the fused sample itself
+        keys = jax.random.split(
+            jax.random.PRNGKey(self.cfg.seed), max(self.cfg.num_steps, 1)
+        )
+        for i in range(self.cfg.num_steps):
+            yield keys[i], self.pipe_cfg.batch_pairs
+
     def train(self, params: Optional[Dict] = None) -> TrainResult:
         cfg = self.cfg
         params = params if params is not None else self.init_params()
-        if cfg.sparse_updates:
+        if self._fused_sampler is not None:
+            # The fused step donates its param buffers; copy like the
+            # sparse path so a caller-held pytree survives.
+            params = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), params)
+            opt_state = self.opt.init(params)
+            step_fn = self._fused_step
+        elif cfg.sparse_updates:
             # The sparse step donates its param buffers; copy once so a
             # caller-held pytree (e.g. for a later cold-start eval) survives.
             params = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), params)
@@ -426,7 +525,6 @@ class Graph4RecTrainer:
         else:
             opt_state = self.opt.init(params)
             step_fn = self._grad_step
-        pipeline = SamplePipeline(self.engine, self.pipe_cfg, seed=cfg.seed)
         loss_hist: List[jax.Array] = []  # in-flight on-device tail
         losses: List[float] = []  # drained, completed losses
         # Keep at least the prefetch window on device before draining; the
@@ -435,11 +533,17 @@ class Graph4RecTrainer:
         drain_tail = max(1, cfg.prefetch_batches + 1)
         evals: List[Dict[str, float]] = []
         pairs_seen = 0
-        batch_iter: Iterator = self._device_batches(pipeline, cfg.num_steps)
         prefetcher: Optional[_Prefetcher] = None
-        if cfg.prefetch_batches > 0:
-            prefetcher = _Prefetcher(batch_iter, cfg.prefetch_batches)
-            batch_iter = prefetcher
+        if self._fused_sampler is not None:
+            batch_iter: Iterator = self._fused_batch_iter()
+        else:
+            pipeline = make_train_sampler(
+                self.engine, self.pipe_cfg, backend="host", seed=cfg.seed
+            )
+            batch_iter = self._device_batches(pipeline, cfg.num_steps)
+            if cfg.prefetch_batches > 0:
+                prefetcher = _Prefetcher(batch_iter, cfg.prefetch_batches)
+                batch_iter = prefetcher
         t0 = time.perf_counter()
         try:
             for step, (dev, npairs) in enumerate(batch_iter):

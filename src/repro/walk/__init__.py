@@ -1,1 +1,3 @@
-from repro.walk.metapath import WalkConfig, MetapathWalker, parse_metapath, jax_walk
+from repro.walk.metapath import (
+    WalkConfig, MetapathWalker, parse_metapath, jax_walk, jax_walk_multi,
+)

@@ -11,8 +11,11 @@ Two implementations:
 - ``MetapathWalker`` — NumPy, runs against ``HeteroGraph`` *or* the
   ``DistributedGraphEngine`` (the production data-pipeline path; the paper's
   walker also runs host-side on the graph servers).
-- ``jax_walk`` — pure ``jax.lax.scan`` over padded adjacency, fully jittable;
-  used by on-device tests and to exercise the sampler under pjit.
+- ``jax_walk`` / ``jax_walk_multi`` — pure ``jax.lax.scan`` over padded
+  adjacency, fully jittable. ``jax_walk_multi`` runs walks of SEVERAL
+  metapaths together (each walk carries its own per-step relation schedule)
+  and is the walk stage of the fused on-device sampler
+  (``sampling/fused.py``); ``jax_walk`` is its single-relation special case.
 """
 from __future__ import annotations
 
@@ -145,6 +148,53 @@ class MetapathWalker:
 
 
 # --------------------------------------------------------------------- JAX
+def jax_walk_multi(
+    key: jax.Array,
+    adj: jnp.ndarray,  # (R, num_nodes, max_degree) padded adjacency per relation
+    degree: jnp.ndarray,  # (R, num_nodes)
+    starts: jnp.ndarray,  # (B,)
+    sched: jnp.ndarray,  # (num_paths, walk_len - 1) relation id per step
+    path_of: jnp.ndarray,  # (B,) metapath index of each walk
+    walk_len: int,
+) -> jnp.ndarray:
+    """Jittable multi-metapath random walk via lax.scan -> (B, walk_len).
+
+    Each walk ``b`` follows its own metapath ``path_of[b]``: at step ``t`` it
+    samples a neighbor under relation ``sched[path_of[b], t - 1]`` from the
+    stacked padded adjacency. Dead ends self-loop and are masked to PAD in
+    the output — PAD is suffix-only, matching ``MetapathWalker``. A PAD (or
+    degree-0) start emits PAD from step 1 on.
+    """
+    B = starts.shape[0]
+    step_rels = sched[path_of].T  # (walk_len - 1, B)
+    # ONE random-bits draw for the whole walk: per-step randint calls cost
+    # a full threefry invocation each, which dominates small-batch walks on
+    # CPU. Offsets come from bits % degree — the modulo bias is
+    # O(max_degree / 2^32), far below anything a distribution test can see.
+    bits = jax.random.bits(key, (max(walk_len - 1, 1), B), jnp.uint32)
+
+    def step(carry, inp):
+        bits_t, rel_t = inp
+        cur, alive = carry
+        deg = degree[rel_t, cur]
+        off = (bits_t % jnp.maximum(deg, 1).astype(jnp.uint32)).astype(deg.dtype)
+        nxt = adj[rel_t, cur, off]
+        ok = alive & (deg > 0)
+        nxt = jnp.where(ok, nxt, cur)
+        return (nxt, ok), jnp.where(ok, nxt, PAD)
+
+    safe_starts = jnp.maximum(starts, 0)
+    # walk_len is small and static: unrolling removes the per-iteration
+    # scan overhead (measurable on CPU, free on TPU)
+    (_, _), rest = jax.lax.scan(
+        step,
+        (safe_starts, starts >= 0),
+        (bits[: walk_len - 1], step_rels),
+        unroll=True,
+    )
+    return jnp.concatenate([starts[:, None], rest.T], axis=1)
+
+
 def jax_walk(
     key: jax.Array,
     adj: jnp.ndarray,  # (num_nodes, max_degree) padded adjacency for ONE relation chain
@@ -155,20 +205,13 @@ def jax_walk(
     """Jittable homogeneous/collapsed-metapath random walk via lax.scan.
 
     For heterogeneous metapaths, pass the *relation-collapsed* adjacency (the
-    composition graph of one metapath period). Dead ends self-loop and are
+    composition graph of one metapath period) — or use ``jax_walk_multi``,
+    which this is the single-relation case of. Dead ends self-loop and are
     masked to PAD in the output, matching the NumPy walker's semantics.
     """
     B = starts.shape[0]
-
-    def step(carry, key_t):
-        cur, alive = carry
-        deg = degree[cur]
-        off = jax.random.randint(key_t, (B,), 0, jnp.maximum(deg, 1))
-        nxt = adj[cur, off]
-        ok = alive & (deg > 0)
-        nxt = jnp.where(ok, nxt, cur)
-        return (nxt, ok), jnp.where(ok, nxt, PAD)
-
-    keys = jax.random.split(key, walk_len - 1)
-    (_, _), rest = jax.lax.scan(step, (starts, jnp.ones((B,), bool)), keys)
-    return jnp.concatenate([starts[:, None], rest.T], axis=1)
+    sched = jnp.zeros((1, max(walk_len - 1, 1)), dtype=jnp.int32)
+    path_of = jnp.zeros((B,), dtype=jnp.int32)
+    return jax_walk_multi(
+        key, adj[None], degree[None], starts, sched, path_of, walk_len
+    )

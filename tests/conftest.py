@@ -5,3 +5,85 @@ import sys
 # and benches run on the single real CPU device; only launch/dryrun.py (run
 # as its own process) forces 512 placeholder devices.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+# The relation pair every recsys test drives (u--click-->i and its reverse).
+RELS = ("u2click2i", "i2click2u")
+
+
+@pytest.fixture(scope="session")
+def toy_ds():
+    """The shared tiny synthetic dataset (TOY spec, seed 0).
+
+    Session-scoped: generation costs ~a second and the graph is read-only
+    in every consumer, so walk/sampling, infer, retrieval, system and fused
+    tests all share one instance instead of regenerating per module.
+    """
+    from repro.graph import TOY, generate
+
+    return generate(TOY, seed=0)
+
+
+@pytest.fixture(scope="session")
+def toy_ds_alt():
+    """Second TOY instance (seed 1) for tests that want an independent
+    graph (e.g. the mp graph-service suite)."""
+    from repro.graph import TOY, generate
+
+    return generate(TOY, seed=1)
+
+
+@pytest.fixture(scope="session")
+def make_model_cfg():
+    """Factory for the small Graph4RecConfig the serving-layer tests share
+    (previously copy-pasted as ``_model_cfg`` in test_infer and friends)."""
+    from repro.core import Graph4RecConfig, HeteroGNNConfig
+    from repro.embedding import EmbeddingConfig, SlotSpec
+
+    def _make(g, gnn=True, side_info=False, dim=16, slot_mode="bag",
+              loss="inbatch_softmax"):
+        slots = (
+            (SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 3))
+            if side_info else ()
+        )
+        return Graph4RecConfig(
+            embedding=EmbeddingConfig(num_nodes=g.num_nodes, dim=dim, slots=slots),
+            gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
+                                num_layers=2, dim=dim) if gnn else None,
+            fanouts=(4, 3) if gnn else (),
+            relations=RELS,
+            use_side_info=side_info,
+            slot_mode=slot_mode,
+            loss=loss,
+        )
+
+    return _make
+
+
+@pytest.fixture(scope="session")
+def trained_embeddings(toy_ds, make_model_cfg):
+    """A small trained checkpoint's (user_emb, item_emb) matrices.
+
+    Shared by retrieval/recall tests that only need *plausible* trained
+    embeddings, so each module stops training its own throwaway model.
+    Returns (user_emb, item_emb, train_pairs) as float32/int64 arrays.
+    """
+    import jax
+
+    from repro.core.model import init_model_params
+    from repro.graph import DistributedGraphEngine
+    from repro.infer import embed_all_nodes
+
+    g = toy_ds.graph
+    cfg = make_model_cfg(g, gnn=False)
+    params = init_model_params(jax.random.PRNGKey(42), cfg)
+    eng = DistributedGraphEngine(g, num_partitions=2)
+    all_emb = embed_all_nodes(params, cfg, eng, g, batch_size=256, seed=3)
+    user_emb = all_emb[: toy_ds.num_users]
+    item_emb = all_emb[toy_ds.num_users : toy_ds.num_users + toy_ds.num_items]
+    train_pairs = np.concatenate(
+        [np.stack([u, i], 1) for (u, i) in toy_ds.train_edges.values()], axis=0
+    )
+    return user_emb, item_emb, train_pairs

@@ -1,0 +1,429 @@
+"""Fused-vs-host sampling conformance suite (ISSUE-5 acceptance).
+
+The contract under test: the fused on-device pipeline (sampling/fused.py —
+walk, window pairs, ego gathers as one jitted program) produces the SAME
+pair and ego distributions as the host ``MetapathWalker`` +
+``SamplePipeline`` path. Where shapes allow the comparison is exact (support
+set equality, PAD propagation, slot tables bitwise); elsewhere it is
+distributional — a two-sample chi-square bound over large fixed-seed draws —
+across homogeneous and multi-metapath configs, PAD/degree-0 nodes, and both
+'values'/'bag' slot modes. The trainer-facing surface is covered too:
+batch structure identical to ``device_batch``, end-to-end training with
+``sampling_backend="fused"`` statistically matching the host loss
+trajectory, and the memory-eligibility fallback.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Graph4RecConfig
+from repro.core import model as model_lib
+from repro.embedding import EmbeddingConfig, SlotSpec
+from repro.graph import DistributedGraphEngine
+from repro.graph.hetero_graph import HeteroGraph
+from repro.sampling import (
+    EgoConfig, PairConfig, PipelineConfig, SamplePipeline, sample_ego_batch,
+    window_positions,
+)
+from repro.sampling.fused import (
+    FusedConfig, FusedSampler, fused_device_bytes, fused_eligibility,
+)
+from repro.train import Graph4RecTrainer, TrainerConfig
+from repro.walk import WalkConfig
+
+from conftest import RELS
+
+PAD = -1
+
+# chi-square homogeneity bound: stat <= dof + SLACK * sqrt(2 * dof) under
+# H0 (mean dof, variance 2*dof); 6 sigma keeps fixed-seed runs deterministic
+# while still catching any real distribution shift.
+CHI2_SLACK = 6.0
+
+
+def chi2_two_sample(counts_a, counts_b) -> bool:
+    """Two-sample chi-square homogeneity test on aligned count vectors."""
+    a = np.asarray(counts_a, dtype=np.float64)
+    b = np.asarray(counts_b, dtype=np.float64)
+    keep = (a + b) > 0
+    a, b = a[keep], b[keep]
+    na, nb = a.sum(), b.sum()
+    stat = np.sum((np.sqrt(nb / na) * a - np.sqrt(na / nb) * b) ** 2 / (a + b))
+    dof = max(len(a) - 1, 1)
+    return stat <= dof + CHI2_SLACK * np.sqrt(2.0 * dof)
+
+
+def dense_bipartite(n_u=6, n_i=5, drop=()):
+    """Small dense u<->i graph; ``drop`` lists user ids left edge-less."""
+    src, dst = [], []
+    for u in range(n_u):
+        if u in drop:
+            continue
+        for i in range(n_i):
+            src.append(u)
+            dst.append(i)
+    return HeteroGraph.from_edges(
+        {"u": n_u, "i": n_i},
+        {"u2click2i": (np.array(src), np.array(dst))},
+        symmetry=True,
+    )
+
+
+def pipe_cfg(metapaths=("u2click2i - i2click2u",), walk_len=5, win=2,
+             ego=None, batch_pairs=64, neg_mode="inbatch"):
+    return PipelineConfig(
+        walk=WalkConfig(metapaths=list(metapaths), walk_len=walk_len),
+        pair=PairConfig(win_size=win, neg_mode=neg_mode, num_negatives=3),
+        ego=ego, batch_pairs=batch_pairs, walks_per_round=32,
+    )
+
+
+def host_pair_counts(graph, pc, num_batches, seed, num_nodes):
+    eng = DistributedGraphEngine(graph, num_partitions=2)
+    pipe = SamplePipeline(eng, pc, seed=seed)
+    counts = np.zeros(num_nodes * num_nodes, np.int64)
+    for b in pipe.batches(num_batches):
+        np.add.at(counts, b.src_ids * num_nodes + b.dst_ids, 1)
+    return counts
+
+
+def fused_pair_counts(fs, pc, num_batches, seed, num_nodes):
+    sample = jax.jit(fs.sample)
+    keys = jax.random.split(jax.random.PRNGKey(seed), num_batches)
+    counts = np.zeros(num_nodes * num_nodes, np.int64)
+    for i in range(num_batches):
+        batch = sample(keys[i])
+        src, dst = batch["src"][0], batch["dst"][0]
+        if fs.ego is not None:  # GNN layout: level 0 carries the centers
+            src, dst = src[0][:, 0], dst[0][:, 0]
+        src, dst = np.asarray(src), np.asarray(dst)
+        ok = src >= 0
+        np.add.at(counts, src[ok] * num_nodes + dst[ok], 1)
+    return counts
+
+
+# ---------------------------------------------------------------- pairs
+@pytest.mark.quick
+class TestPairConformance:
+    def test_support_set_equality(self):
+        """Exact contract: on a dense tiny graph both backends emit exactly
+        the same SET of (src, dst) pairs once sampling saturates."""
+        g = dense_bipartite()
+        pc = pipe_cfg(batch_pairs=64)
+        host = host_pair_counts(g, pc, 40, seed=0, num_nodes=g.num_nodes)
+        fs = FusedSampler(g, pc)
+        fused = fused_pair_counts(fs, pc, 40, seed=0, num_nodes=g.num_nodes)
+        assert set(np.flatnonzero(host)) == set(np.flatnonzero(fused))
+
+    def test_pair_distribution_matches(self):
+        g = dense_bipartite()
+        pc = pipe_cfg(batch_pairs=64)
+        host = host_pair_counts(g, pc, 120, seed=1, num_nodes=g.num_nodes)
+        fs = FusedSampler(g, pc)
+        fused = fused_pair_counts(fs, pc, 120, seed=2, num_nodes=g.num_nodes)
+        assert chi2_two_sample(host, fused)
+
+    def test_pair_distribution_multi_metapath(self):
+        """Two metapaths with different start types: the mixture must match
+        (host splits walks round-robin, fused draws per walk)."""
+        g = dense_bipartite()
+        pc = pipe_cfg(
+            metapaths=("u2click2i - i2click2u", "i2click2u - u2click2i"),
+            batch_pairs=64,
+        )
+        host = host_pair_counts(g, pc, 120, seed=3, num_nodes=g.num_nodes)
+        fs = FusedSampler(g, pc)
+        fused = fused_pair_counts(fs, pc, 120, seed=4, num_nodes=g.num_nodes)
+        assert chi2_two_sample(host, fused)
+
+    def test_pair_distribution_with_dead_ends(self):
+        """PAD handling: users without edges never appear, and the walk's
+        PAD suffix does not skew the surviving pair distribution."""
+        g = dense_bipartite(n_u=7, drop=(2, 5))
+        pc = pipe_cfg(batch_pairs=64)
+        host = host_pair_counts(g, pc, 120, seed=5, num_nodes=g.num_nodes)
+        fs = FusedSampler(g, pc)
+        fused = fused_pair_counts(fs, pc, 120, seed=6, num_nodes=g.num_nodes)
+        for dead in (2, 5):
+            assert fused.reshape(g.num_nodes, -1)[dead].sum() == 0
+            assert fused.reshape(g.num_nodes, -1)[:, dead].sum() == 0
+        assert chi2_two_sample(host, fused)
+
+    def test_window_positions_match_host_pairs(self):
+        """The fused static position table enumerates exactly the host
+        window: every host (src_col, dst_col) pair and no more."""
+        pos = {tuple(p) for p in window_positions(6, 2)}
+        from repro.sampling import window_pairs
+
+        paths = np.arange(6)[None, :]  # all-valid path
+        host = {(int(r[1]), int(r[2])) for r in window_pairs(paths, 2)}
+        assert pos == host
+
+
+# ------------------------------------------------------------------ ego
+@pytest.mark.quick
+class TestEgoConformance:
+    def _counts(self, children, vocab):
+        c = np.zeros(vocab + 1, np.int64)  # last slot counts PAD
+        ch = np.asarray(children).reshape(-1)
+        np.add.at(c, np.where(ch >= 0, ch, vocab), 1)
+        return c
+
+    @pytest.mark.parametrize("order", ["walk_ego_pair", "walk_pair_ego"])
+    def test_child_distribution_per_center(self, order):
+        g = dense_bipartite()
+        ego = EgoConfig(relations=list(RELS), fanouts=[3, 2])
+        pc = dataclasses.replace(pipe_cfg(ego=ego), order=order)
+        fs = FusedSampler(g, pc)
+        centers = np.arange(g.num_nodes, dtype=np.int64)
+        rng = np.random.default_rng(0)
+        reps = 60
+        host_children = [
+            sample_ego_batch(rng, g, centers, ego).levels[1] for _ in range(reps)
+        ]
+        ego_fn = jax.jit(fs._ego_levels)
+        keys = jax.random.split(jax.random.PRNGKey(1), reps)
+        fused_children = [
+            np.asarray(ego_fn(keys[i], jax.numpy.asarray(centers))[1])
+            for i in range(reps)
+        ]
+        R, F = len(RELS), 3
+        hc = np.stack(host_children).reshape(reps, len(centers), R, F)
+        fc = np.stack(fused_children).reshape(reps, len(centers), R, F)
+        for v in centers:
+            for ri in range(R):
+                assert chi2_two_sample(
+                    self._counts(hc[:, v, ri], g.num_nodes),
+                    self._counts(fc[:, v, ri], g.num_nodes),
+                ), (v, ri)
+
+    @pytest.mark.parametrize("order", ["walk_ego_pair", "walk_pair_ego"])
+    def test_all_dead_round_emits_pad_pairs(self, order):
+        """A round where no walk can take a single step (every start has
+        degree 0) must emit all-PAD pairs in BOTH ego orders — never a
+        real-node center paired against a PAD side."""
+        g = dense_bipartite(n_u=4, n_i=3, drop=(0, 1, 2, 3))  # edgeless
+        ego = EgoConfig(relations=list(RELS), fanouts=[2])
+        pc = dataclasses.replace(pipe_cfg(ego=ego, batch_pairs=16), order=order)
+        fs = FusedSampler(g, pc)
+        batch = jax.jit(fs.sample)(jax.random.PRNGKey(0))
+        for part in ("src", "dst"):
+            levels, _ = batch[part]
+            for l in levels:
+                assert (np.asarray(l) == PAD).all(), (order, part)
+
+    def test_degree0_and_pad_centers_propagate_pad(self):
+        g = dense_bipartite(n_u=6, drop=(3,))
+        ego = EgoConfig(relations=["u2click2i"], fanouts=[2, 2])
+        pc = pipe_cfg(ego=ego)
+        fs = FusedSampler(g, pc)
+        centers = jax.numpy.asarray(np.array([3, PAD, 6], np.int64))  # dead u, PAD, item
+        levels = jax.jit(fs._ego_levels)(jax.random.PRNGKey(0), centers)
+        # u=3 has no edges, PAD is PAD, items have no u2click2i out-edges
+        assert (np.asarray(levels[1]) == PAD).all()
+        assert (np.asarray(levels[2]) == PAD).all()
+        # identical to the host sampler's handling
+        host = sample_ego_batch(
+            np.random.default_rng(0), g, np.array([3, 6]), ego
+        )
+        assert (host.levels[1] == PAD).all() and (host.levels[2] == PAD).all()
+
+    def test_level_widths_match_host(self, toy_ds):
+        g = toy_ds.graph
+        ego = EgoConfig(relations=list(RELS), fanouts=[4, 3])
+        fs = FusedSampler(g, pipe_cfg(ego=ego, walk_len=6))
+        centers = jax.numpy.arange(7)
+        levels = jax.jit(fs._ego_levels)(jax.random.PRNGKey(0), centers)
+        host = sample_ego_batch(
+            np.random.default_rng(0), g, np.arange(7), ego
+        )
+        assert [tuple(np.asarray(l).shape) for l in levels] == [
+            tuple(l.shape) for l in host.levels
+        ]
+
+
+# ------------------------------------------------------------ slot modes
+@pytest.mark.quick
+class TestSlotConformance:
+    def _graph_cfgs(self, toy_ds, slot_mode):
+        g = toy_ds.graph
+        slots = (SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 3))
+        mc = Graph4RecConfig(
+            embedding=EmbeddingConfig(num_nodes=g.num_nodes, dim=16, slots=slots),
+            gnn=None, relations=RELS, use_side_info=True, slot_mode=slot_mode,
+        )
+        return g, mc
+
+    def test_values_mode_slot_tables_bitwise(self, toy_ds):
+        g, mc = self._graph_cfgs(toy_ds, "values")
+        vspecs = model_lib.value_slot_specs(mc)
+        fs = FusedSampler(g, pipe_cfg(), value_slots=vspecs)
+        ids = np.array([0, 5, PAD, g.num_nodes - 1, 17], np.int64)
+        got = fs._slot_values(jax.numpy.asarray(ids))
+        want = model_lib._slots_for_ids(g, ids, vspecs)
+        for name in want:
+            np.testing.assert_array_equal(np.asarray(got[name]), want[name])
+
+    def test_bag_mode_count_matrices_bitwise(self, toy_ds):
+        g, mc = self._graph_cfgs(toy_ds, "bag")
+        bspecs = model_lib.bag_slot_specs(mc)
+        fs = FusedSampler(g, pipe_cfg(), bag_slots=bspecs)
+        want = model_lib.slot_count_arrays(g, mc)
+        assert set(fs._bag_counts) == set(want)
+        for name in want:
+            np.testing.assert_array_equal(
+                np.asarray(fs._bag_counts[name]), np.asarray(want[name])
+            )
+
+    @pytest.mark.parametrize("slot_mode", ["values", "bag"])
+    def test_batch_structure_matches_device_batch(self, toy_ds, slot_mode):
+        """The fused batch is pytree-compatible with ``device_batch`` (same
+        keys, same part layouts, same shapes) so loss_fn runs unchanged."""
+        g = toy_ds.graph
+        slots = (SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 3))
+        mc = Graph4RecConfig(
+            embedding=EmbeddingConfig(num_nodes=g.num_nodes, dim=16, slots=slots),
+            gnn=model_lib.HeteroGNNConfig(
+                gnn_type="lightgcn", num_relations=2, num_layers=2, dim=16
+            ),
+            fanouts=(3, 2), relations=RELS,
+            use_side_info=True, slot_mode=slot_mode,
+        )
+        ego = EgoConfig(relations=list(RELS), fanouts=[3, 2])
+        pc = pipe_cfg(ego=ego, batch_pairs=32)
+        bspecs = model_lib.bag_slot_specs(mc)
+        vspecs = model_lib.value_slot_specs(mc)
+        fs = FusedSampler(g, pc, value_slots=vspecs, bag_slots=bspecs)
+        fused = jax.jit(fs.sample)(jax.random.PRNGKey(0))
+
+        eng = DistributedGraphEngine(g, num_partitions=2)
+        host_batch = next(iter(SamplePipeline(eng, pc, seed=0).batches(1)))
+        host = model_lib.device_batch(g, host_batch, mc)
+        assert set(fused) == set(host)
+        f_struct = jax.tree_util.tree_structure(fused)
+        h_struct = jax.tree_util.tree_structure(host)
+        assert f_struct == h_struct
+        for fl, hl in zip(jax.tree_util.tree_leaves(fused),
+                          jax.tree_util.tree_leaves(host)):
+            assert fl.shape == hl.shape, (fl.shape, hl.shape)
+        # and the model consumes it
+        params = model_lib.init_model_params(jax.random.PRNGKey(1), mc)
+        assert np.isfinite(float(model_lib.loss_fn(params, mc, fused)))
+
+
+# ------------------------------------------------------------- end to end
+class TestFusedTraining:
+    def _trainer(self, toy_ds, backend, steps=60, **cfg_kw):
+        g = toy_ds.graph
+        mc = Graph4RecConfig(
+            embedding=EmbeddingConfig(num_nodes=g.num_nodes, dim=16),
+            gnn=model_lib.HeteroGNNConfig(
+                gnn_type="lightgcn", num_relations=2, num_layers=2, dim=16
+            ),
+            fanouts=(4, 3), relations=RELS,
+        )
+        pc = pipe_cfg(
+            ego=EgoConfig(relations=list(RELS), fanouts=[4, 3]),
+            walk_len=6, batch_pairs=128,
+        )
+        eng = DistributedGraphEngine(g, num_partitions=2)
+        return Graph4RecTrainer(
+            toy_ds, eng, mc, pc,
+            TrainerConfig(num_steps=steps, log_every=0, eval_at_end=False,
+                          sparse_lr=1.0, seed=0, sampling_backend=backend,
+                          **cfg_kw),
+        )
+
+    def test_loss_trajectory_statistically_matches_host(self, toy_ds):
+        """Acceptance: fused end-to-end training tracks the host pipeline.
+        Same model/seed, independent sampling streams — the tail-window
+        mean losses must agree within the run-to-run noise scale."""
+        tails = {}
+        for backend in ("host", "fused"):
+            res = self._trainer(toy_ds, backend, steps=80).train()
+            assert len(res.losses) == 80
+            assert np.isfinite(res.losses).all()
+            tails[backend] = np.asarray(res.losses[-20:])
+        scale = max(tails["host"].std(), tails["fused"].std(), 1e-3)
+        assert abs(tails["host"].mean() - tails["fused"].mean()) < 6 * scale
+
+    @pytest.mark.quick
+    def test_fused_deterministic_per_seed(self, toy_ds):
+        r1 = self._trainer(toy_ds, "fused", steps=8).train()
+        r2 = self._trainer(toy_ds, "fused", steps=8).train()
+        assert r1.losses == r2.losses
+        assert r1.pairs_seen == 8 * 128
+
+    @pytest.mark.quick
+    def test_over_budget_falls_back_to_host(self, toy_ds, caplog):
+        tr = self._trainer(toy_ds, "fused", steps=3, fused_budget_mb=0.0001)
+        assert tr._fused_sampler is None  # fell back
+        res = tr.train()
+        assert len(res.losses) == 3
+        ok, why = fused_eligibility(
+            toy_ds.graph, tr.pipe_cfg,
+            fused=FusedConfig(budget_mb=0.0001),
+        )
+        assert not ok and "budget" in why
+
+    @pytest.mark.quick
+    def test_eligibility_accounts_tables(self, toy_ds):
+        pc = pipe_cfg(ego=EgoConfig(relations=list(RELS), fanouts=[2]))
+        n = fused_device_bytes(toy_ds.graph, pc, max_degree=8)
+        # 2 relations x (8+1) int32 per node
+        assert n == 2 * toy_ds.graph.num_nodes * 9 * 4
+        ok, _ = fused_eligibility(toy_ds.graph, pc)
+        assert ok
+
+    @pytest.mark.quick
+    def test_unknown_backend_raises(self, toy_ds):
+        with pytest.raises(ValueError, match="sampling_backend"):
+            self._trainer(toy_ds, "device")
+
+    @pytest.mark.quick
+    def test_random_negative_mode(self, toy_ds):
+        g = toy_ds.graph
+        pc = pipe_cfg(neg_mode="random", batch_pairs=32)
+        fs = FusedSampler(g, pc)
+        batch = jax.jit(fs.sample)(jax.random.PRNGKey(0))
+        neg_ids = np.asarray(batch["neg"][0])
+        assert neg_ids.shape == (32 * 3,)
+        assert ((neg_ids >= 0) & (neg_ids < g.num_nodes)).all()
+
+
+# ------------------------------------------------------------- kernel
+@pytest.mark.quick
+class TestWindowPairKernel:
+    @pytest.mark.parametrize("B,L,win", [(1, 4, 2), (7, 6, 2), (33, 5, 4)])
+    def test_kernel_matches_ref(self, B, L, win):
+        from repro.kernels import ops, ref
+
+        rng = np.random.default_rng(B * L + win)
+        paths = rng.integers(0, 50, size=(B, L))
+        for b in range(B):  # random PAD suffixes, incl. all-PAD rows
+            cut = rng.integers(0, L + 1)
+            paths[b, cut:] = PAD
+        pos = window_positions(L, win)
+        s_k, d_k = ops.window_pair_ids(jax.numpy.asarray(paths), pos)
+        s_r, d_r = ref.window_pair_ids_ref(jax.numpy.asarray(paths), pos)
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+
+    def test_kernel_vs_host_window_pairs(self):
+        from repro.kernels import ops
+        from repro.sampling import window_pairs
+
+        rng = np.random.default_rng(0)
+        paths = rng.integers(0, 9, size=(12, 6))
+        paths[paths % 4 == 0] = PAD  # interior PADs too (adversarial)
+        pos = window_positions(6, 2)
+        s, d = ops.window_pair_ids(jax.numpy.asarray(paths), pos)
+        s, d = np.asarray(s), np.asarray(d)
+        got = {
+            (r, int(pos[p, 0]), int(pos[p, 1]))
+            for r in range(12) for p in range(len(pos)) if s[r, p] != PAD
+        }
+        want = {tuple(map(int, row)) for row in window_pairs(paths, 2)}
+        assert got == want

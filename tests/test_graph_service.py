@@ -42,8 +42,10 @@ def _watchdog():
 
 
 @pytest.fixture(scope="module")
-def ds():
-    return generate(TOY, seed=1)
+def ds(toy_ds_alt):
+    # shared session dataset (tests/conftest.py) — seed-1 instance so the
+    # mp suite exercises a graph independent of the seed-0 consumers
+    return toy_ds_alt
 
 
 @pytest.fixture(scope="module")

@@ -14,40 +14,25 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import Graph4RecConfig, HeteroGNNConfig
 from repro.core.model import init_model_params
-from repro.embedding import EmbeddingConfig, SlotSpec
-from repro.graph import DistributedGraphEngine, GraphClient, TOY, generate
+from repro.graph import DistributedGraphEngine, GraphClient
 from repro.infer import embed_all_nodes, export_embeddings, load_embeddings
 from repro.train import checkpoint
 
-RELS = ("u2click2i", "i2click2u")
+from conftest import RELS
 
 
 @pytest.fixture(scope="module")
-def ds():
-    return generate(TOY, seed=0)
-
-
-def _model_cfg(g, gnn=True, side_info=False):
-    slots = (
-        (SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 3)) if side_info else ()
-    )
-    return Graph4RecConfig(
-        embedding=EmbeddingConfig(num_nodes=g.num_nodes, dim=16, slots=slots),
-        gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
-                            num_layers=2, dim=16) if gnn else None,
-        fanouts=(4, 3) if gnn else (),
-        relations=RELS,
-        use_side_info=side_info,
-    )
+def ds(toy_ds):
+    # shared session dataset + model-config factory live in tests/conftest.py
+    return toy_ds
 
 
 class TestEmbedAllNodes:
     @pytest.mark.quick
-    def test_walk_based_covers_every_node_any_batch(self, ds):
+    def test_walk_based_covers_every_node_any_batch(self, ds, make_model_cfg):
         g = ds.graph
-        cfg = _model_cfg(g, gnn=False)
+        cfg = make_model_cfg(g, gnn=False)
         params = init_model_params(jax.random.PRNGKey(0), cfg)
         # walk-based inference is deterministic: chunking must not matter,
         # including a tail chunk (batch does not divide num_nodes)
@@ -64,9 +49,9 @@ class TestEmbedAllNodes:
         assert np.array_equal(e1, direct)
 
     @pytest.mark.quick
-    def test_gnn_fixed_seed_deterministic(self, ds):
+    def test_gnn_fixed_seed_deterministic(self, ds, make_model_cfg):
         g = ds.graph
-        cfg = _model_cfg(g)
+        cfg = make_model_cfg(g)
         params = init_model_params(jax.random.PRNGKey(1), cfg)
         eng = DistributedGraphEngine(g, num_partitions=4)
         e1 = embed_all_nodes(params, cfg, eng, g, batch_size=96, seed=11)
@@ -76,18 +61,18 @@ class TestEmbedAllNodes:
         assert not np.array_equal(e1, e3)  # sampling stream actually used
 
     @pytest.mark.quick
-    def test_side_info_values_mode(self, ds):
+    def test_side_info_values_mode(self, ds, make_model_cfg):
         g = ds.graph
         import dataclasses
 
-        cfg = dataclasses.replace(_model_cfg(g, side_info=True), slot_mode="values")
+        cfg = dataclasses.replace(make_model_cfg(g, side_info=True), slot_mode="values")
         params = init_model_params(jax.random.PRNGKey(2), cfg)
         eng = DistributedGraphEngine(g, num_partitions=2)
         e = embed_all_nodes(params, cfg, eng, g, batch_size=128, seed=0)
         assert e.shape == (g.num_nodes, 16) and np.isfinite(e).all()
 
     @pytest.mark.mp
-    def test_inproc_vs_mp_bitwise_identical(self, ds):
+    def test_inproc_vs_mp_bitwise_identical(self, ds, make_model_cfg):
         """The acceptance criterion: both engine backends produce the same
         matrix bit for bit under a fixed seed, in fixed-shape batches."""
 
@@ -98,7 +83,7 @@ class TestEmbedAllNodes:
         signal.alarm(120)
         try:
             g = ds.graph
-            cfg = _model_cfg(g)
+            cfg = make_model_cfg(g)
             params = init_model_params(jax.random.PRNGKey(3), cfg)
             eng = DistributedGraphEngine(g, num_partitions=4)
             e_in = embed_all_nodes(params, cfg, eng, g, batch_size=100, seed=7)
@@ -164,7 +149,7 @@ class TestCheckpointPathNormalization:
 
 class TestTrainerEvalRouting:
     @pytest.mark.quick
-    def test_evaluate_routes_through_retrieval_config(self, ds):
+    def test_evaluate_routes_through_retrieval_config(self, ds, make_model_cfg):
         """Satellite: evaluate() uses the new path; method/top_n/max_users
         come from TrainerConfig, and device == bruteforce exactly."""
         from repro.sampling import EgoConfig, PairConfig, PipelineConfig
@@ -172,7 +157,7 @@ class TestTrainerEvalRouting:
         from repro.walk import WalkConfig
 
         g = ds.graph
-        cfg = _model_cfg(g)
+        cfg = make_model_cfg(g)
         pc = PipelineConfig(
             walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=5),
             pair=PairConfig(win_size=2),

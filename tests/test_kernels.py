@@ -16,6 +16,7 @@ def rand(key, shape, dtype):
 TOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
 
 
+@pytest.mark.quick
 class TestSegAggr:
     @pytest.mark.parametrize("mode", ["mean", "sum", "max"])
     @pytest.mark.parametrize("shape", [(8, 4, 128), (37, 6, 130), (1, 1, 8), (64, 32, 256)])

@@ -127,6 +127,7 @@ class TestDecodeConsistency:
         )
         assert rel < 2e-2, (arch_id, rel)
 
+    @pytest.mark.quick
     def test_sliding_window_ring_cache(self):
         """Ring cache (SWA) must match full forward with window mask."""
         spec = get_arch("starcoder2-7b", reduced=True)

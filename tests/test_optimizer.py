@@ -6,6 +6,8 @@ import pytest
 
 from repro.train import optimizer as O
 
+pytestmark = pytest.mark.quick
+
 
 def quad_loss(p):
     return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["emb/t"] - 1.0) ** 2)

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.quick
+
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
@@ -95,6 +97,114 @@ class TestPairInvariants:
             assert sc != dc
             assert abs(sc - dc) <= win
             assert paths[r, sc] != -1 and paths[r, dc] != -1
+
+
+class TestJaxWalkProperties:
+    """Invariants of the on-device walker (walk/metapath.py:jax_walk_multi)
+    on randomly generated heterographs: PAD propagation (once PAD, always
+    PAD), walk-length/shape invariants, and metapath type chaining."""
+
+    @staticmethod
+    def _walk_setup(data, walk_len, max_degree=8):
+        from repro.graph.hetero_graph import HeteroGraph
+
+        n_u, n_i, src, dst = data
+        g = HeteroGraph.from_edges(
+            {"u": n_u, "i": n_i}, {"u2click2i": (src, dst)}, symmetry=True
+        )
+        rels = ["u2click2i", "i2click2u"]
+        adj, deg = zip(*(g.padded_adjacency(r, max_degree) for r in rels))
+        sched = np.array(
+            [[k % 2 for k in range(max(walk_len - 1, 1))]], dtype=np.int32
+        )  # u2click2i, i2click2u, u2click2i, ...
+        return g, jnp.asarray(np.stack(adj)), jnp.asarray(np.stack(deg)), sched
+
+    @given(edge_lists(), st.integers(2, 7), st.integers(0, 2 ** 31 - 1))
+    @settings(**SETTINGS)
+    def test_pad_propagates_and_shape(self, data, walk_len, seed):
+        from repro.walk import jax_walk_multi
+
+        g, adj, deg, sched = self._walk_setup(data, walk_len)
+        n_u = data[0]
+        starts = np.concatenate([np.arange(n_u), [-1]])  # include a PAD start
+        out = np.asarray(jax_walk_multi(
+            jax.random.PRNGKey(seed % (2 ** 31)), adj, deg,
+            jnp.asarray(starts), jnp.asarray(sched),
+            jnp.zeros(len(starts), jnp.int32), walk_len,
+        ))
+        assert out.shape == (len(starts), walk_len)
+        np.testing.assert_array_equal(out[:, 0], starts)
+        for row in out:
+            seen_pad = False
+            for x in row[1:]:
+                if x == -1:
+                    seen_pad = True
+                else:
+                    assert not seen_pad  # once PAD, always PAD
+        assert (out[-1, 1:] == -1).all()  # PAD start stays PAD
+
+    @given(edge_lists(), st.integers(0, 2 ** 31 - 1))
+    @settings(**SETTINGS)
+    def test_metapath_type_chaining(self, data, seed):
+        """Every non-PAD node at step t has the type the metapath's t-th
+        relation produces (u at even steps, i at odd steps)."""
+        from repro.walk import jax_walk_multi
+
+        walk_len = 6
+        g, adj, deg, sched = self._walk_setup(data, walk_len)
+        n_u = data[0]
+        out = np.asarray(jax_walk_multi(
+            jax.random.PRNGKey(seed % (2 ** 31)), adj, deg,
+            jnp.arange(n_u), jnp.asarray(sched),
+            jnp.zeros(n_u, jnp.int32), walk_len,
+        ))
+        for row in out:
+            for t, x in enumerate(row):
+                if x == -1:
+                    continue
+                assert (x < n_u) == (t % 2 == 0)
+
+    @given(edge_lists(), st.integers(0, 2 ** 31 - 1))
+    @settings(**SETTINGS)
+    def test_steps_are_true_neighbors(self, data, seed):
+        from repro.walk import jax_walk_multi
+
+        walk_len = 5
+        g, adj, deg, sched = self._walk_setup(data, walk_len)
+        n_u = data[0]
+        rels = ["u2click2i", "i2click2u"]
+        out = np.asarray(jax_walk_multi(
+            jax.random.PRNGKey(seed % (2 ** 31)), adj, deg,
+            jnp.arange(n_u), jnp.asarray(sched),
+            jnp.zeros(n_u, jnp.int32), walk_len,
+        ))
+        for row in out:
+            for t in range(1, walk_len):
+                if row[t] == -1:
+                    break
+                nbrs = g.relations[rels[(t - 1) % 2]].neighbors(int(row[t - 1]))
+                assert int(row[t]) in nbrs
+
+    @given(edge_lists(), st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+    @settings(**SETTINGS)
+    def test_single_relation_wrapper_consistent(self, data, walk_len, seed):
+        """jax_walk (the degenerate single-relation case) emits nodes of the
+        collapsed relation's adjacency and respects PAD semantics."""
+        from repro.walk import jax_walk
+
+        g, adj, deg, _ = self._walk_setup(data, walk_len)
+        n_u = data[0]
+        out = np.asarray(jax_walk(
+            jax.random.PRNGKey(seed % (2 ** 31)), adj[0], deg[0],
+            jnp.arange(n_u), walk_len,
+        ))
+        assert out.shape == (n_u, walk_len)
+        padded = np.asarray(adj[0])
+        for row in out:
+            for t in range(1, walk_len):
+                if row[t] == -1:
+                    break
+                assert int(row[t]) in padded[int(row[t - 1])]
 
 
 class TestKernelProperties:

@@ -306,3 +306,60 @@ class TestEvaluateRecall:
         ue, ie, train, _ = self._pairs()
         out = evaluate_recall(ue, ie, train, np.empty((0, 2), np.int64))
         assert all(v == 0.0 for v in out.values())
+
+    def test_trained_checkpoint_embeddings_method_invariant(
+        self, toy_ds, trained_embeddings
+    ):
+        """On the shared trained-checkpoint fixture (tests/conftest.py) the
+        device path still matches the oracle exactly — realistic embedding
+        geometry, not just random gaussians."""
+        ue, ie, train = trained_embeddings
+        evalp = toy_ds.val_pairs
+        kw = dict(top_k=20, top_n=8, item_chunk=64)
+        a = evaluate_recall_bruteforce(ue, ie, train, evalp, **kw)
+        b = evaluate_recall(ue, ie, train, evalp, method="device", **kw)
+        assert a == b
+
+
+class TestChunkSizeValidation:
+    """Non-positive chunk widths used to be silently accepted (clamped or
+    looped over nothing); they now raise ValueError at the API boundary."""
+
+    def test_ivf_rejects_nonpositive_chunks_and_probes(self):
+        it = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
+        with pytest.raises(ValueError, match="assign_chunk"):
+            IVFIndex.build(it, IVFConfig(nlist=4, assign_chunk=0))
+        with pytest.raises(ValueError, match="assign_chunk"):
+            IVFIndex.build(it, IVFConfig(nlist=4, assign_chunk=-5))
+        with pytest.raises(ValueError, match="nlist"):
+            IVFIndex.build(it, IVFConfig(nlist=0))
+        with pytest.raises(ValueError, match="nprobe"):
+            IVFIndex.build(it, IVFConfig(nlist=4, nprobe=0))
+        idx = IVFIndex.build(it, IVFConfig(nlist=4, nprobe=2))
+        with pytest.raises(ValueError, match="nprobe"):
+            idx.search(it[:3], 5, nprobe=0)
+        # custom positive chunk width stays exact
+        idx2 = IVFIndex.build(it, IVFConfig(nlist=4, nprobe=4, assign_chunk=7))
+        s, i = idx2.search(it[:3], 5)
+        s0, i0 = IVFIndex.build(it, IVFConfig(nlist=4, nprobe=4)).search(it[:3], 5)
+        assert np.array_equal(i, i0)
+
+    def test_embed_all_nodes_rejects_nonpositive_batch(self, toy_ds, make_model_cfg):
+        import jax
+
+        from repro.core.model import init_model_params
+        from repro.infer import embed_all_nodes
+
+        g = toy_ds.graph
+        cfg = make_model_cfg(g, gnn=False)
+        params = init_model_params(jax.random.PRNGKey(0), cfg)
+        for bad in (0, -1):
+            with pytest.raises(ValueError, match="batch_size"):
+                embed_all_nodes(params, cfg, g, g, batch_size=bad)
+
+    def test_chunked_topk_rejects_nonpositive_chunks(self):
+        q, it, _ = _data()
+        with pytest.raises(ValueError, match="item_chunk"):
+            chunked_topk(q, it, 5, item_chunk=0)
+        with pytest.raises(ValueError, match="query_chunk"):
+            chunked_topk(q, it, 5, query_chunk=-1)

@@ -4,6 +4,9 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.serve import BatchedServer, ServeConfig
+import pytest
+
+pytestmark = pytest.mark.quick
 
 
 def test_generate_batches_and_shapes():

@@ -63,6 +63,7 @@ class TestEndToEnd:
         assert np.mean(res.losses[-10:]) < np.mean(res.losses[:10])
         assert after["u2i"] > before["u2i"], (before, after)
 
+    @pytest.mark.quick
     def test_walk_based_training_runs(self, ds):
         tr = build_trainer(ds, walk_based=True, steps=40)
         res = tr.train()
@@ -115,3 +116,19 @@ class TestCheckpoint:
         ev1 = tr.evaluate(res.params)
         ev2 = tr.evaluate({k: np.asarray(v) for k, v in loaded.items()})
         assert ev1 == ev2
+
+
+@pytest.mark.quick
+def test_every_test_module_has_a_quick_test():
+    """Quick-marker audit: `make test-fast` must touch every subsystem, so
+    each test module carries at least one @pytest.mark.quick (or module
+    pytestmark) — new test files fail here until they add one."""
+    import pathlib
+
+    missing = []
+    for p in sorted(pathlib.Path(__file__).parent.glob("test_*.py")):
+        text = p.read_text()
+        # an actual marker, not just the word "quick" in prose
+        if "pytest.mark.quick" not in text and "pytestmark" not in text:
+            missing.append(p.name)
+    assert not missing, f"test files without a quick marker: {missing}"

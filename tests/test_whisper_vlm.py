@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.models import qwen2_vl as VLM
@@ -71,6 +72,7 @@ class TestVLM:
         l2 = VLM.vlm_loss(params, cfg, toks, labels, p2, spec.grid_hw)
         assert float(l1) != float(l2)
 
+    @pytest.mark.quick
     def test_merge_overwrites_image_span(self):
         spec = get_arch("qwen2-vl-7b", reduced=True)
         cfg = spec.lm
