@@ -1,12 +1,15 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench-throughput bench-step bench-engine bench-recall bench-walk
+.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 test-fast:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q -m quick
+
+lint:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.lint
 
 bench-throughput:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --quick
@@ -22,3 +25,6 @@ bench-recall:
 
 bench-walk:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --walk --full
+
+bench-sanitize:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --sanitize

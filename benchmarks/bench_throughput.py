@@ -505,6 +505,50 @@ def walk_fusion_bench(quick: bool = True, results: Dict = None) -> None:
         results["walk_fusion"] = out
 
 
+def sanitize_bench(quick: bool = True, results: Dict = None) -> None:
+    """Transfer-guard sanitizer overhead (`--sanitize` / `make bench-sanitize`).
+
+    Runs the trainer with ``sanitize_transfers`` on vs off, host and fused
+    sampling backends, reporting the wall-time overhead of dispatching every
+    jitted step under ``jax.transfer_guard("disallow")``. The guarded arms
+    double as the hard check: an implicit host->device transfer anywhere in
+    the step dispatch raises instead of silently serializing, so this arm
+    failing IS the regression signal. Arms are interleaved per rep.
+    """
+    ds = dataset("toy")
+    steps = 40 if quick else 120
+    out: Dict = {"dataset": "toy", "steps": steps}
+    for backend in ("host", "fused"):
+        trainers = {
+            mode: trainer(
+                ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
+                sampling_backend=backend, sanitize_transfers=(mode == "guarded"),
+            )
+            for mode in ("off", "guarded")
+        }
+        for tr in trainers.values():
+            tr.train()  # compile + warm
+        best: Dict[str, float] = {}
+        for _ in range(3):  # interleaved: both arms see the same machine
+            for mode, tr in trainers.items():
+                res = tr.train()
+                best[mode] = min(best.get(mode, 1e9), res.wall_time_s)
+        overhead = best["guarded"] / best["off"]
+        for mode in ("off", "guarded"):
+            emit(
+                f"sanitize/{backend}/{mode}", best[mode] / steps * 1e6,
+                f"pairs_per_sec={steps * tr.pipe_cfg.batch_pairs / best[mode]:.0f}",
+            )
+        emit(f"sanitize/{backend}/overhead", 0.0, f"overhead={overhead:.3f}x")
+        out[backend] = {
+            "wall_s_off": round(best["off"], 4),
+            "wall_s_guarded": round(best["guarded"], 4),
+            "overhead": round(overhead, 4),
+        }
+    if results is not None:
+        results["sanitize"] = out
+
+
 def kernel_micro(quick: bool = True, results: Dict = None) -> None:
     from repro.kernels import ops
 
@@ -580,6 +624,11 @@ def run_walk_only(quick: bool = True) -> Dict:
     return _run_one_arm(walk_fusion_bench, quick)
 
 
+def run_sanitize_only(quick: bool = True) -> Dict:
+    """`--sanitize`: just the transfer-guard arm, merged into the JSON."""
+    return _run_one_arm(sanitize_bench, quick)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     grp = ap.add_mutually_exclusive_group()
@@ -593,6 +642,8 @@ if __name__ == "__main__":
                      help="run only the inproc-vs-mp graph-service arm")
     arm.add_argument("--walk", action="store_true",
                      help="run only the fused-vs-host sampling arm")
+    arm.add_argument("--sanitize", action="store_true",
+                     help="run only the transfer-guard sanitizer arm")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.step:
@@ -601,5 +652,7 @@ if __name__ == "__main__":
         run_engine_only(quick=not args.full)
     elif args.walk:
         run_walk_only(quick=not args.full)
+    elif args.sanitize:
+        run_sanitize_only(quick=not args.full)
     else:
         run(quick=not args.full)

@@ -47,6 +47,7 @@ def trainer(
     engine_backend: str = "inproc",
     num_engine_workers: int = 2,
     sampling_backend: str = "host",
+    sanitize_transfers: bool = True,
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -91,7 +92,8 @@ def trainer(
                       engine_backend=engine_backend,
                       num_engine_workers=num_engine_workers,
                       num_engine_partitions=num_partitions,
-                      sampling_backend=sampling_backend),
+                      sampling_backend=sampling_backend,
+                      sanitize_transfers=sanitize_transfers),
     )
 
 

@@ -207,12 +207,16 @@ class HeteroGraph:
 
     # ------------------------------------------------------ dense jax export
     def padded_adjacency(
-        self, relation: str, max_degree: int, pad_id: int = -1
+        self, relation: str, max_degree: int, pad_id: int = -1, seed: int = 0
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Fixed-width adjacency (num_nodes, max_degree) + true degrees.
 
         Used by the fully-jittable on-device sampler: wide rows are truncated
         (uniform subsample), short rows padded. Returns (adj, degree).
+
+        The subsample is keyed by ``[seed, node id]`` (the partition_rng
+        spawn-key idiom), so two builds with the same seed are bitwise
+        identical while the caller's seed still reaches every draw.
         """
         from repro.utils.ragged import ragged_row_offsets
 
@@ -226,9 +230,10 @@ class HeteroGraph:
             row_of, col = ragged_row_offsets(clipped)
             adj[row_of, col] = csr.indices[starts[row_of] + col]
         # over-wide rows: per-row uniform subsample without replacement,
-        # deterministically keyed by the node id (stable across calls)
+        # deterministically keyed by (seed, node id) — stable across calls
+        # AND derived from the caller seed, never the node id alone
         for v in np.flatnonzero(degs > max_degree):
-            adj[v] = np.random.default_rng(v).choice(
+            adj[v] = np.random.default_rng([seed, int(v)]).choice(
                 csr.neighbors(v), max_degree, replace=False
             )
         return adj, clipped

@@ -16,12 +16,30 @@ their mappings, the creator ``unlink()``s on shutdown.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from multiprocessing import shared_memory
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 _ALIGN = 64  # cache-line align each array inside a segment
+
+
+def _unlink_by_name(name: str) -> None:
+    """Finalizer backstop: unlink a segment by name if it still exists.
+
+    Keyed by name (not the SharedMemory object) so the finalizer holds no
+    reference to the segment it guards; if the owner already unlinked on the
+    explicit close path this is a no-op.
+    """
+    try:
+        seg = attach_segment(name)
+    except FileNotFoundError:
+        return
+    try:
+        seg.unlink()
+    finally:
+        seg.close()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +97,9 @@ def build_shard(
             packed.append((offset, arr))
             offset += _aligned(arr.nbytes)
     seg = shared_memory.SharedMemory(create=True, size=max(offset, 1))
+    # the explicit unlink path is GraphClient.close(); this finalizer is the
+    # backstop that keeps /dev/shm clean if the creator dies before closing
+    weakref.finalize(seg, _unlink_by_name, seg.name)
     for off, arr in packed:
         view = np.ndarray(arr.shape, dtype=arr.dtype, buffer=seg.buf, offset=off)
         view[...] = arr

@@ -96,3 +96,61 @@ def attention_ref(
     att = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", att, v)
     return out.reshape(B, Sq, H, hd)
+
+
+# kernels/flash_attn.py exports the same attention contract under the flash
+# name; the oracle is identical.
+flash_attention_ref = attention_ref
+
+
+# ----------------------------------------------------------------- topk MIPS
+def chunked_topk_ref(
+    queries: jnp.ndarray,  # (Q, d)
+    items: jnp.ndarray,  # (I, d)
+    k: int,
+    exclude: Optional[jnp.ndarray] = None,  # (Q, E) int32, -1 padded
+):
+    """Dense top-k MIPS oracle -> ((Q, k) f32 scores, (Q, k) i32 ids).
+
+    Tie-break matches the streaming kernel: on equal scores the lower item
+    id wins (``lax.top_k`` keeps the first occurrence and ids ascend).
+    """
+    scores = jnp.dot(
+        queries.astype(jnp.float32),
+        items.astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )  # (Q, I)
+    if exclude is not None:
+        gid = jnp.arange(items.shape[0], dtype=jnp.int32)
+        hit = (exclude[:, :, None] == gid[None, None, :]).any(axis=1)
+        scores = jnp.where(hit, float("-inf"), scores)
+    best_s, best_i = jax.lax.top_k(scores, k)
+    return best_s, best_i.astype(jnp.int32)
+
+
+# ------------------------------------------------------------- row adagrad
+def row_adagrad_scatter_ref(
+    table: jnp.ndarray,  # (N, D)
+    accum: jnp.ndarray,  # (N, 1)
+    ids: jnp.ndarray,  # (bucket,) int; PADs (-1) allowed, real ids distinct
+    grads: jnp.ndarray,  # (bucket, D)
+    lr: float = 0.1,
+    eps: float = 1e-8,
+):
+    """Gather/row-AdaGrad/scatter oracle -> updated (table, accum).
+
+    PAD slots (id < 0) are dropped; rows not named in ``ids`` pass through.
+    """
+    N = table.shape[0]
+    ids = ids.astype(jnp.int32)
+    rows = jnp.where(ids >= 0, ids, N)  # OOB -> dropped at scatter
+    safe = jnp.maximum(ids, 0)
+    g = grads
+    new_acc = accum[safe] + jnp.mean(g * g, axis=-1, keepdims=True).astype(
+        accum.dtype
+    )
+    new_row = (table[safe] - lr * g / (jnp.sqrt(new_acc) + eps)).astype(table.dtype)
+    return (
+        table.at[rows].set(new_row, mode="drop"),
+        accum.at[rows].set(new_acc, mode="drop"),
+    )

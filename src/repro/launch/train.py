@@ -54,6 +54,7 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     spec = get_arch(args.arch, reduced=args.reduced)
@@ -63,11 +64,11 @@ def main() -> None:
 
         spec = dataclasses.replace(spec, microbatches=1)
     opt = opt_lib.adam(args.lr)
-    params = spec.init_params(jax.random.PRNGKey(0))
+    params = spec.init_params(jax.random.PRNGKey(args.seed))
     opt_state = opt.init(params)
     step_fn = jax.jit(spec.make_train_step(opt))
 
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     losses = []
     t0 = time.perf_counter()
     for step in range(args.steps):

@@ -1,0 +1,20 @@
+"""reprolint: AST static analysis enforcing this repo's three load-bearing
+contracts — per-seed determinism, hot-path host-sync hygiene, and the Pallas
+kernel conventions — plus thread/process lifecycle checks. See docs/lint.md.
+
+Import surface: the static pass (core + rule modules) is stdlib-only so CI
+can run ``make lint`` without jax installed; the runtime transfer sanitizer
+lives in ``repro.lint.sanitizer`` (imports jax) and is loaded only by its
+users (train/trainer.py, benchmarks, tests).
+"""
+from repro.lint.core import (  # noqa: F401
+    BASELINE_FILE,
+    Finding,
+    LintModule,
+    Rule,
+    all_rules,
+    load_baseline,
+    new_findings,
+    run_lint,
+    write_baseline,
+)

@@ -1,0 +1,361 @@
+"""Determinism rules (D family).
+
+The per-seed determinism contract (docs/sampling.md): every stochastic
+component is keyed by an explicit caller seed, derived the way
+``graph.engine.partition_rng`` does — ``np.random.default_rng([seed, ...])``
+— so the same TrainerConfig.seed reproduces a run bitwise across engine
+backends and process layouts. These rules flag the ways that contract
+silently rots: entropy-seeded or id-seeded generators, legacy global-state
+numpy RNG, constant PRNGKeys in library code, and JAX key reuse.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.lint.core import (
+    Finding,
+    LintModule,
+    Rule,
+    attr_source,
+    call_name,
+    keyword_arg,
+)
+
+# substrings that mark an identifier as carrying caller-derived randomness
+_SEEDY = ("seed", "rng", "key", "entropy")
+
+# numpy legacy global-state API (np.random.<fn> without a Generator)
+_NP_GLOBAL = {
+    "seed", "rand", "randn", "randint", "random", "choice", "shuffle",
+    "permutation", "uniform", "normal", "standard_normal", "binomial",
+    "poisson", "beta", "gamma", "exponential", "bytes", "sample", "ranf",
+    "random_sample", "get_state", "set_state",
+}
+
+# jax.random functions that do NOT consume their key argument (fold_in and
+# friends derive; PRNGKey/key construct). Everything else, split included,
+# consumes it.
+_KEY_NONCONSUMING = {"fold_in", "PRNGKey", "key", "key_data", "wrap_key_data", "clone"}
+
+
+def _is_default_rng(node: ast.Call) -> bool:
+    name = call_name(node)
+    return name == "default_rng" or name.endswith(".default_rng")
+
+
+def _seed_like(identifier: str) -> bool:
+    low = identifier.lower()
+    return any(t in low for t in _SEEDY)
+
+
+def _derives_seed(node: ast.expr) -> bool:
+    """True when the expression visibly carries a caller seed: a constant, a
+    seed-named variable/attribute, or any compound expression with such a
+    leaf (``self.cfg.seed + 7``, ``[int(seed), int(part)]``'s head, ...)."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return _seed_like(node.id)
+    if isinstance(node, ast.Attribute):
+        return _seed_like(node.attr)
+    if isinstance(node, ast.Call):
+        return any(_derives_seed(a) for a in node.args) or any(
+            kw.value is not None and _derives_seed(kw.value) for kw in node.keywords
+        )
+    if isinstance(node, ast.BinOp):
+        return _derives_seed(node.left) or _derives_seed(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _derives_seed(node.operand)
+    if isinstance(node, ast.Subscript):
+        return _derives_seed(node.value)
+    return False
+
+
+def _check_d001(module: LintModule) -> List[Finding]:
+    out = []
+    for node in ast.walk(module.tree):
+        if (
+            isinstance(node, ast.Call)
+            and _is_default_rng(node)
+            and not node.args
+            and not node.keywords
+        ):
+            out.append(
+                module.finding(
+                    D001, node,
+                    "np.random.default_rng() with no seed draws OS entropy — "
+                    "every run differs",
+                )
+            )
+    return out
+
+
+def _check_d002(module: LintModule) -> List[Finding]:
+    if module.is_test:  # test seeds come from fixed parametrize values
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Call) and _is_default_rng(node) and node.args):
+            continue
+        arg = node.args[0]
+        if isinstance(arg, (ast.List, ast.Tuple)):
+            # the [seed, ...] spawn-key idiom: the head must carry the seed
+            ok = bool(arg.elts) and _derives_seed(arg.elts[0])
+        else:
+            ok = _derives_seed(arg)
+        if not ok:
+            out.append(
+                module.finding(
+                    D002, node,
+                    "default_rng seed is not derived from a caller seed "
+                    "(no seed-carrying term in the expression)",
+                )
+            )
+    return out
+
+
+def _check_d003(module: LintModule) -> List[Finding]:
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name.startswith("np.random.") or name.startswith("numpy.random."):
+            fn = name.rsplit(".", 1)[1]
+            if fn in _NP_GLOBAL:
+                out.append(
+                    module.finding(
+                        D003, node,
+                        f"legacy global-state RNG np.random.{fn}() — shared "
+                        "mutable state across every caller and thread",
+                    )
+                )
+    return out
+
+
+def _in_eval_shape(module: LintModule, node: ast.AST) -> bool:
+    for anc in module.ancestors(node):
+        if isinstance(anc, ast.Call) and call_name(anc).endswith("eval_shape"):
+            return True
+    return False
+
+
+def _check_d004(module: LintModule) -> List[Finding]:
+    if module.is_test:
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if not (name.endswith("random.PRNGKey") or name == "PRNGKey"):
+            continue
+        if node.args and isinstance(node.args[0], ast.Constant):
+            # shape-only tracing never consumes the key's value
+            if _in_eval_shape(module, node):
+                continue
+            out.append(
+                module.finding(
+                    D004, node,
+                    f"constant PRNGKey({node.args[0].value!r}) in library code "
+                    "pins the run to one stream regardless of caller seed",
+                )
+            )
+    return out
+
+
+# --------------------------------------------------------------- D005: reuse
+def _terminates(body: List[ast.stmt]) -> bool:
+    """True when a branch body cannot fall through to the next statement."""
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break)
+    )
+
+
+
+def _key_consumer(node: ast.Call) -> Optional[str]:
+    """Name of the bare key variable this jax.random call consumes, if any."""
+    name = call_name(node)
+    if not (name.startswith("jax.random.") or name.startswith("random.")):
+        return None
+    fn = name.rsplit(".", 1)[1]
+    if fn in _KEY_NONCONSUMING:
+        return None
+    kw = keyword_arg(node, "key")
+    first = node.args[0] if node.args else kw
+    if isinstance(first, ast.Name):
+        return first.id
+    return None
+
+
+class _KeyScope:
+    """Statement-ordered traversal tracking which key names are consumed.
+
+    Branch-aware: if/else arms see a copy of the state and merge by union
+    (a key consumed in either arm counts as consumed after the if). Loop
+    bodies are scanned twice so a key consumed on iteration 1 and reused on
+    iteration 2 is caught, while loop-carried ``key, sub = split(key)``
+    reassignment stays clean.
+    """
+
+    def __init__(self, module: LintModule):
+        self.module = module
+        self.findings: List[Finding] = []
+
+    def run(self, body: List[ast.stmt]) -> None:
+        self._exec_body(body, {}, report=True)
+
+    # state: name -> lineno of the consuming call
+    def _exec_body(self, body, state: Dict[str, int], report: bool) -> None:
+        for stmt in body:
+            self._exec_stmt(stmt, state, report)
+
+    def _exec_stmt(self, stmt: ast.stmt, state: Dict[str, int], report: bool) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # nested scopes are walked separately
+        if isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, state, report)
+            s_body, s_else = dict(state), dict(state)
+            self._exec_body(stmt.body, s_body, report)
+            self._exec_body(stmt.orelse, s_else, report)
+            # merge by union, excluding arms that never fall through (an
+            # early-returning branch cannot leak its consumption forward)
+            state.clear()
+            if not _terminates(stmt.orelse):
+                state.update(s_else)
+            if not _terminates(stmt.body):
+                state.update(s_body)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter, state, report)
+            first = dict(state)
+            self._reset_target(stmt.target, first)  # rebound every iteration
+            self._exec_body(stmt.body, first, report)
+            second = dict(first)
+            self._reset_target(stmt.target, second)
+            self._exec_body(stmt.body, second, report)
+            state.clear()
+            state.update(second)
+            self._exec_body(stmt.orelse, state, report)
+            return
+        if isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, state, report)
+            first = dict(state)
+            self._exec_body(stmt.body, first, report)
+            second = dict(first)
+            self._exec_body(stmt.body, second, report)
+            state.clear()
+            state.update(second)
+            self._exec_body(stmt.orelse, state, report)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, state, report)
+            self._exec_body(stmt.body, state, report)
+            return
+        if isinstance(stmt, ast.Try):
+            self._exec_body(stmt.body, state, report)
+            for h in stmt.handlers:
+                self._exec_body(h.body, dict(state), report)
+            self._exec_body(stmt.orelse, state, report)
+            self._exec_body(stmt.finalbody, state, report)
+            return
+        if isinstance(stmt, ast.Assign):
+            self._scan_expr(stmt.value, state, report)
+            for tgt in stmt.targets:
+                self._reset_target(tgt, state)
+            return
+        if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self._scan_expr(stmt.value, state, report)
+            self._reset_target(stmt.target, state)
+            return
+        # any other statement: scan embedded expressions in source order
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._scan_expr(child, state, report)
+            elif isinstance(child, ast.stmt):
+                self._exec_stmt(child, state, report)
+
+    def _reset_target(self, tgt: ast.AST, state: Dict[str, int]) -> None:
+        for node in ast.walk(tgt):
+            if isinstance(node, ast.Name):
+                state.pop(node.id, None)
+
+    def _scan_expr(self, expr: ast.expr, state: Dict[str, int], report: bool) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Lambda,)):
+                continue  # deferred body: not executed here
+            if not isinstance(node, ast.Call):
+                continue
+            name = _key_consumer(node)
+            if name is None:
+                continue
+            if name in state:
+                if report:
+                    self.findings.append(
+                        self.module.finding(
+                            D005, node,
+                            f"PRNG key '{name}' already consumed by a "
+                            f"jax.random call at line {state[name]} — reusing "
+                            "it replays the same randomness",
+                        )
+                    )
+            else:
+                state[name] = node.lineno
+
+
+def _check_d005(module: LintModule) -> List[Finding]:
+    if not module.imports("jax"):
+        return []
+    scope = _KeyScope(module)
+    # module body (skipping defs), then each function body independently
+    scope.run(module.tree.body)
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scope.run(node.body)
+    # deduplicate: a nested function is reachable from both walks
+    seen: Set[tuple] = set()
+    out = []
+    for f in scope.findings:
+        k = (f.line, f.col)
+        if k not in seen:
+            seen.add(k)
+            out.append(f)
+    return out
+
+
+D001 = Rule(
+    "D001", "rng-entropy-seed", "determinism",
+    "np.random.default_rng() without a seed argument",
+    "pass an explicit seed: default_rng(seed) or default_rng([seed, part])",
+    _check_d001,
+)
+D002 = Rule(
+    "D002", "rng-underived-seed", "determinism",
+    "default_rng seeded by something that does not carry a caller seed",
+    "derive the seed like graph.engine.partition_rng: "
+    "np.random.default_rng([seed, local_id])",
+    _check_d002,
+)
+D003 = Rule(
+    "D003", "np-global-random", "determinism",
+    "legacy np.random.* global-state use",
+    "create a Generator: rng = np.random.default_rng(seed); rng.<fn>(...)",
+    _check_d003,
+)
+D004 = Rule(
+    "D004", "constant-prngkey", "determinism",
+    "constant jax.random.PRNGKey(...) outside tests",
+    "thread a seed parameter: jax.random.PRNGKey(cfg.seed)",
+    _check_d004,
+)
+D005 = Rule(
+    "D005", "prng-key-reuse", "determinism",
+    "same JAX key consumed by two jax.random calls without a split",
+    "split first: k1, k2 = jax.random.split(key), or derive via fold_in",
+    _check_d005,
+)
+
+RULES = (D001, D002, D003, D004, D005)

@@ -1,0 +1,116 @@
+"""Host-sync / tracer-hygiene rules (H family).
+
+The trainer's throughput design overlaps host sampling with device compute;
+one implicit sync in the step loop serializes the whole pipeline (the
+ROADMAP's 0.78x mp gap is exactly this class of bug). These rules apply only
+to the hot-path modules (``core.HOT_PATH_GLOBS``) and only when the module
+imports jax — the graph service workers are numpy-only processes and may
+sync however they like.
+
+- **H001** implicit device->host sync: ``float(x)`` / ``x.item()`` /
+  ``np.asarray(x)`` / ``block_until_ready`` force the device to drain.
+  Deliberate syncs go through the audited helpers in
+  ``repro.lint.sanitizer`` (``host_scalar`` / ``host_floats`` /
+  ``device_barrier``), built on explicit ``jax.device_get``.
+- **H002** implicit host->device transfer: ``jnp.asarray`` / ``jnp.array``
+  on host data is an H2D copy that ``jax.transfer_guard("disallow")`` (the
+  runtime sanitizer) treats as *explicit* and therefore cannot catch, and
+  that a producer thread hides from profiles. ``jax.device_put`` is the
+  one legal spelling in hot-path modules.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.lint.core import Finding, LintModule, Rule, call_name
+
+_SYNC_CALLS = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+
+
+def _applies(module: LintModule) -> bool:
+    return module.is_hot_path and module.imports("jax")
+
+
+def _check_h001(module: LintModule) -> List[Finding]:
+    if not _applies(module):
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name == "float" and node.args and not isinstance(node.args[0], ast.Constant):
+            out.append(
+                module.finding(
+                    H001, node,
+                    "float() on a (possibly device) value blocks until the "
+                    "device queue drains",
+                    "use repro.lint.sanitizer.host_scalar(x) for a deliberate "
+                    "sync (explicit jax.device_get)",
+                )
+            )
+        elif name in _SYNC_CALLS:
+            out.append(
+                module.finding(
+                    H001, node,
+                    f"{name}() on a device value is an implicit D2H copy",
+                    "jax.device_get(x) is the explicit spelling (or move the "
+                    "conversion out of the hot path)",
+                )
+            )
+        elif name.endswith("block_until_ready"):
+            out.append(
+                module.finding(
+                    H001, node,
+                    "block_until_ready stalls the dispatch pipeline",
+                    "use repro.lint.sanitizer.device_barrier(x) at the one "
+                    "audited drain point, not in the hot path",
+                )
+            )
+        elif isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            out.append(
+                module.finding(
+                    H001, node,
+                    ".item() forces a device sync per element",
+                    "use repro.lint.sanitizer.host_scalar / host_floats",
+                )
+            )
+    return out
+
+
+def _check_h002(module: LintModule) -> List[Finding]:
+    if not _applies(module):
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name in ("jnp.asarray", "jnp.array", "jax.numpy.asarray", "jax.numpy.array"):
+            out.append(
+                module.finding(
+                    H002, node,
+                    f"{name}() is an implicit H2D transfer that "
+                    "jax.transfer_guard('disallow') cannot see",
+                )
+            )
+    return out
+
+
+H001 = Rule(
+    "H001", "implicit-host-sync", "hostsync",
+    "implicit device->host sync in a hot-path module",
+    "route deliberate syncs through repro.lint.sanitizer "
+    "(host_scalar/host_floats/device_barrier) or explicit jax.device_get",
+    _check_h001,
+)
+H002 = Rule(
+    "H002", "implicit-h2d-transfer", "hostsync",
+    "implicit jnp.asarray host->device transfer in a hot-path module",
+    "jax.device_put(x) — explicit, profiled, and the only spelling the "
+    "transfer-guard sanitizer certifies",
+    _check_h002,
+)
+
+RULES = (H001, H002)

@@ -1,0 +1,311 @@
+"""Pallas kernel rules (P family), over ``src/repro/kernels/*.py``.
+
+Every kernel in this repo follows three conventions the fused training path
+depends on:
+
+- **P001** every ``//`` in a ``pl.pallas_call`` grid is exact: the dividend
+  is either padded to a tile multiple first (the ``Bp = -(-B // tb) * tb``
+  ceil-pad idiom) or guarded by an ``assert X % tile == 0``. A silently
+  floor-divided grid drops the ragged tail of the input.
+- **P002** ``input_output_aliases`` indices are consistent: operand indices
+  count scalar-prefetch args (``PrefetchScalarGridSpec.num_scalar_prefetch``
+  offsets them), stay within the call's operand arity, map to declared
+  ``out_shape`` entries, and each aliased output's dtype is tied to its
+  input operand (``table.dtype``) — the shape/dtype agreement buffer
+  donation requires (callers jit these wrappers with ``donate_argnums`` on
+  the aliased operands).
+- **P003** every public ``*_pallas`` wrapper has a pure-jnp oracle
+  ``*_ref`` in ``kernels/ref.py`` — the correctness contract the
+  cross-backend tests sweep.
+- **P004** ``pl.pallas_call`` appears only under ``kernels/`` (keeps the
+  grid/alias/ref conventions auditable in one place).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.lint.core import (
+    Finding,
+    LintModule,
+    Rule,
+    call_name,
+    expr_source,
+    keyword_arg,
+)
+
+_REF_CACHE: Dict[Path, Set[str]] = {}
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    return name == "pallas_call" or name.endswith(".pallas_call")
+
+
+def _grid_expr(module: LintModule, node: ast.Call) -> Optional[ast.expr]:
+    """The grid tuple of a pallas_call: ``grid=`` directly, or ``grid=``
+    inside a ``grid_spec=SomeGridSpec(...)`` call."""
+    grid = keyword_arg(node, "grid")
+    if grid is not None:
+        return grid
+    spec = keyword_arg(node, "grid_spec")
+    if isinstance(spec, ast.Call):
+        return keyword_arg(spec, "grid")
+    return None
+
+
+def _resolve_name(func: Optional[ast.AST], name: str) -> Optional[ast.expr]:
+    """Last assignment to ``name`` in the enclosing function body."""
+    if func is None:
+        return None
+    found = None
+    for stmt in ast.walk(func):
+        if isinstance(stmt, ast.Assign):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    found = stmt.value
+    return found
+
+
+def _is_padded_assign(value: ast.expr) -> bool:
+    """Matches the ceil-pad idiom: any expression computing a tile multiple
+    (contains a FloorDiv later multiplied, e.g. ``-(-B // tb) * tb``)."""
+    has_floordiv = any(
+        isinstance(n, ast.BinOp) and isinstance(n.op, ast.FloorDiv)
+        for n in ast.walk(value)
+    )
+    has_mult = any(
+        isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult)
+        for n in ast.walk(value)
+    )
+    return has_floordiv and has_mult
+
+
+def _has_divisibility_assert(func: Optional[ast.AST], dividend_src: str, module) -> bool:
+    if func is None:
+        return False
+    for stmt in ast.walk(func):
+        if not isinstance(stmt, ast.Assert):
+            continue
+        for n in ast.walk(stmt.test):
+            if (
+                isinstance(n, ast.BinOp)
+                and isinstance(n.op, ast.Mod)
+                and expr_source(module, n.left) == dividend_src
+            ):
+                return True
+    return False
+
+
+def _check_p001(module: LintModule) -> List[Finding]:
+    if not module.is_kernel:
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(node)):
+            continue
+        func = module.enclosing_function(node)
+        grid = _grid_expr(module, node)
+        if isinstance(grid, ast.Name):
+            grid = _resolve_name(func, grid.id)
+        if not isinstance(grid, (ast.Tuple, ast.List)):
+            continue
+        for elt in grid.elts:
+            if not (isinstance(elt, ast.BinOp) and isinstance(elt.op, ast.FloorDiv)):
+                continue
+            dividend = elt.left
+            src = expr_source(module, dividend)
+            if _has_divisibility_assert(func, src, module):
+                continue
+            if isinstance(dividend, ast.Name):
+                assigned = _resolve_name(func, dividend.id)
+                if assigned is not None and _is_padded_assign(assigned):
+                    continue
+            out.append(
+                module.finding(
+                    P001, elt,
+                    f"grid dimension '{expr_source(module, elt)}' floor-divides "
+                    f"'{src}' without a pad-to-multiple or divisibility assert "
+                    "— a ragged tail would be silently dropped",
+                )
+            )
+    return out
+
+
+def _const_int(node: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _check_p002(module: LintModule) -> List[Finding]:
+    if not module.is_kernel:
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(node)):
+            continue
+        aliases = keyword_arg(node, "input_output_aliases")
+        if not isinstance(aliases, ast.Dict):
+            continue
+        pairs: List[Tuple[int, int]] = []
+        for k, v in zip(aliases.keys, aliases.values):
+            ki, vi = _const_int(k), _const_int(v)
+            if ki is not None and vi is not None:
+                pairs.append((ki, vi))
+        # scalar-prefetch offset: operand indices include prefetch args
+        n_prefetch = 0
+        spec = keyword_arg(node, "grid_spec")
+        if isinstance(spec, ast.Call):
+            n_prefetch = _const_int(keyword_arg(spec, "num_scalar_prefetch")) or 0
+        # the outer invocation pallas_call(...)(operands) carries the arity
+        parent = module.parent(node)
+        n_operands = None
+        operand_exprs: List[ast.expr] = []
+        if isinstance(parent, ast.Call) and parent.func is node:
+            if not any(isinstance(a, ast.Starred) for a in parent.args):
+                n_operands = len(parent.args)
+                operand_exprs = list(parent.args)
+        out_shape = keyword_arg(node, "out_shape")
+        out_shapes = (
+            out_shape.elts if isinstance(out_shape, (ast.List, ast.Tuple)) else None
+        )
+        for ki, vi in pairs:
+            if ki < n_prefetch:
+                out.append(
+                    module.finding(
+                        P002, aliases,
+                        f"alias input {ki} is a scalar-prefetch operand "
+                        f"(num_scalar_prefetch={n_prefetch}); aliasing it "
+                        "corrupts the prefetched scalars",
+                    )
+                )
+                continue
+            if n_operands is not None and ki >= n_operands:
+                out.append(
+                    module.finding(
+                        P002, aliases,
+                        f"alias input {ki} out of range: the call passes only "
+                        f"{n_operands} operands",
+                    )
+                )
+                continue
+            if out_shapes is not None:
+                if vi >= len(out_shapes):
+                    out.append(
+                        module.finding(
+                            P002, aliases,
+                            f"alias output {vi} out of range: out_shape "
+                            f"declares {len(out_shapes)} results",
+                        )
+                    )
+                    continue
+                # donated-buffer dtype agreement: the aliased out_shape must
+                # reference its input operand (e.g. table.dtype)
+                if operand_exprs:
+                    op_src = expr_source(module, operand_exprs[ki])
+                    shape_src = expr_source(module, out_shapes[vi])
+                    if (
+                        isinstance(operand_exprs[ki], ast.Name)
+                        and op_src not in shape_src
+                    ):
+                        out.append(
+                            module.finding(
+                                P002, out_shapes[vi],
+                                f"aliased output {vi} does not tie its dtype/"
+                                f"shape to operand '{op_src}' (alias {ki}->"
+                                f"{vi} requires matching buffers for "
+                                "donation)",
+                            )
+                        )
+    return out
+
+
+def _ref_names(module: LintModule) -> Set[str]:
+    """Top-level ``*_ref`` names defined in this module's sibling ref.py."""
+    ref_path = module.path.parent / "ref.py"
+    key = ref_path.resolve()
+    if key in _REF_CACHE:
+        return _REF_CACHE[key]
+    names: Set[str] = set()
+    if ref_path.exists():
+        tree = ast.parse(ref_path.read_text())
+        for stmt in tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names.add(stmt.name)
+            elif isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+    _REF_CACHE[key] = names
+    return names
+
+
+def _check_p003(module: LintModule) -> List[Finding]:
+    if not module.is_kernel or module.path.name in ("ref.py", "ops.py"):
+        return []
+    out = []
+    refs = _ref_names(module)
+    for stmt in module.tree.body:
+        if not isinstance(stmt, ast.FunctionDef):
+            continue
+        if not stmt.name.endswith("_pallas") or stmt.name.startswith("_"):
+            continue
+        want = stmt.name[: -len("_pallas")] + "_ref"
+        if want not in refs:
+            out.append(
+                module.finding(
+                    P003, stmt,
+                    f"kernel wrapper '{stmt.name}' has no '{want}' oracle in "
+                    "kernels/ref.py — the correctness contract is untestable",
+                )
+            )
+    return out
+
+
+def _check_p004(module: LintModule) -> List[Finding]:
+    if module.is_kernel or module.is_test:
+        return []
+    out = []
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call) and _is_pallas_call(node):
+            out.append(
+                module.finding(
+                    P004, node,
+                    "pl.pallas_call outside src/repro/kernels/ escapes the "
+                    "grid/alias/ref conventions",
+                )
+            )
+    return out
+
+
+P001 = Rule(
+    "P001", "grid-divisibility", "pallas",
+    "pallas_call grid floor-division without pad or assert",
+    "pad the axis to a tile multiple (Xp = -(-X // t) * t) or assert "
+    "X % t == 0 before the call",
+    _check_p001,
+)
+P002 = Rule(
+    "P002", "alias-consistency", "pallas",
+    "input_output_aliases inconsistent with prefetch offset/arity/out_shape",
+    "offset alias keys by num_scalar_prefetch, keep them within the operand "
+    "list, and declare aliased out_shapes from the operand (x.shape, x.dtype)",
+    _check_p002,
+)
+P003 = Rule(
+    "P003", "missing-ref-oracle", "pallas",
+    "*_pallas kernel without a *_ref oracle in kernels/ref.py",
+    "add the pure-jnp reference with the same signature to kernels/ref.py "
+    "and sweep it in tests/test_kernels.py",
+    _check_p003,
+)
+P004 = Rule(
+    "P004", "pallas-outside-kernels", "pallas",
+    "pl.pallas_call outside src/repro/kernels/",
+    "move the kernel into src/repro/kernels/ with a ref.py oracle",
+    _check_p004,
+)
+
+RULES = (P001, P002, P003, P004)

@@ -1,0 +1,56 @@
+"""Runtime transfer sanitizer + the sanctioned host-sync helpers.
+
+This is the dynamic half of the H-family lint rules: the static pass bans
+implicit syncs/transfers from hot-path modules, and this module provides
+(1) the guard that makes implicit transfers *fail at runtime* and (2) the
+one audited place where deliberate syncs are spelled explicitly.
+
+``transfer_sanitizer`` wraps a scope in ``jax.transfer_guard("disallow")``:
+any implicit host<->device transfer inside it raises instead of silently
+serializing the pipeline. The trainer runs every jitted step dispatch under
+it (``TrainerConfig.sanitize_transfers``), the hot-path tests assert train
+runs stay green under it, and ``bench_throughput.py --sanitize`` fails hard
+on transfer regressions. Two blind spots the static rules cover instead:
+the guard treats ``jnp.asarray`` as an *explicit* transfer (hence lint rule
+H002 bans it in hot paths — ``jax.device_put`` is the one legal spelling),
+and the guard is thread-local, so it cannot see conversions in the prefetch
+producer thread.
+
+The helpers below are intentionally the only place in the hot path where
+``float``/``block_until_ready`` appear: every use is an explicit
+``jax.device_get``-routed drain a reviewer can audit in one screen.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterable, List
+
+import jax
+
+
+def transfer_sanitizer(enabled: bool = True):
+    """Context manager: disallow implicit transfers inside the scope.
+
+    Explicit ``jax.device_put`` / ``jax.device_get`` remain legal; anything
+    implicit (a numpy array or python scalar fed straight to a jitted call,
+    ``float()`` on a device value) raises. ``enabled=False`` returns a
+    no-op context so call sites can thread a config flag without branching.
+    """
+    if not enabled:
+        return contextlib.nullcontext()
+    return jax.transfer_guard("disallow")
+
+
+def host_scalar(x) -> float:
+    """Deliberate single-value device->host sync (explicit device_get)."""
+    return float(jax.device_get(x))
+
+
+def host_floats(xs: Iterable) -> List[float]:
+    """Deliberate batched device->host drain: one device_get for the lot."""
+    return [float(v) for v in jax.device_get(list(xs))]
+
+
+def device_barrier(x):
+    """Deliberate pipeline drain point (end of run / before timing)."""
+    return jax.block_until_ready(x)

@@ -90,7 +90,9 @@ def make_train_sampler(
     ``sampling.fused.FusedSampler`` built over the engine's graph — the
     whole walk->pair->ego front end as one jittable device program; callers
     should gate it with ``fused.fused_eligibility`` first (the trainer
-    does, falling back to "host" with a warning).
+    does, falling back to "host" with a warning). ``seed`` reaches both
+    backends: the host pipeline's stream RNG and the fused sampler's
+    build-time padded-adjacency subsample.
     """
     if backend == "host":
         return SamplePipeline(engine, config, seed=seed)
@@ -102,7 +104,7 @@ def make_train_sampler(
             graph, config,
             value_slots=value_slots, bag_slots=bag_slots,
             fused=fused_cfg if fused_cfg is not None else FusedConfig(),
-            bag_counts=bag_counts,
+            bag_counts=bag_counts, seed=seed,
         )
     raise ValueError(f"unknown sampling backend {backend!r}")
 

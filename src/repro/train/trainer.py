@@ -36,7 +36,6 @@ import time
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as model_lib
@@ -44,6 +43,12 @@ from repro.core.recall import evaluate_recall
 from repro.embedding import optimizer as emb_opt
 from repro.embedding import table as emb
 from repro.graph.generator import RecsysDataset
+from repro.lint.sanitizer import (
+    device_barrier,
+    host_floats,
+    host_scalar,
+    transfer_sanitizer,
+)
 from repro.sampling.fused import FusedConfig, fused_eligibility
 from repro.sampling.pipeline import (
     PipelineConfig, SamplePipeline, make_train_sampler,
@@ -129,6 +134,12 @@ class TrainerConfig:
     fused_oversample: float = 2.0
     # Route the fused pair gather through the Pallas window-pair kernel.
     fused_use_kernel_pairs: bool = True
+    # Run every jitted step dispatch under jax.transfer_guard("disallow")
+    # (repro.lint.sanitizer): an implicit host<->device transfer in the hot
+    # loop raises instead of silently serializing the pipeline. Explicit
+    # jax.device_put/device_get stay legal; the guard is thread-local, so
+    # the prefetch producer is covered by lint rule H002 instead.
+    sanitize_transfers: bool = True
 
 
 @dataclasses.dataclass
@@ -210,6 +221,15 @@ class _Prefetcher:
                     )
             if item is _DONE:
                 self._thread.join(timeout=5.0)
+                if self._thread.is_alive():
+                    # Mirrors close(): a producer that delivered its sentinel
+                    # but wedged before returning would otherwise leak into
+                    # the next train() call unannounced.
+                    log.warning(
+                        "prefetch producer still running after its "
+                        "end-of-stream sentinel; it is a daemon and will "
+                        "exit with the process"
+                    )
                 if self._err is not None:
                     # Same exception object -> original producer traceback.
                     raise self._err
@@ -327,7 +347,7 @@ class Graph4RecTrainer:
             )
             if ok:
                 self._fused_sampler = make_train_sampler(
-                    dataset.graph, pipe_cfg, backend="fused",
+                    dataset.graph, pipe_cfg, backend="fused", seed=cfg.seed,
                     value_slots=vspecs, bag_slots=bspecs, fused_cfg=fused_cfg,
                     bag_counts=(
                         model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
@@ -512,14 +532,19 @@ class Graph4RecTrainer:
         params = params if params is not None else self.init_params()
         if self._fused_sampler is not None:
             # The fused step donates its param buffers; copy like the
-            # sparse path so a caller-held pytree survives.
-            params = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), params)
+            # sparse path so a caller-held pytree survives. device_put is
+            # the explicit H2D spelling (no-op on already-device leaves).
+            params = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x).copy(), params
+            )
             opt_state = self.opt.init(params)
             step_fn = self._fused_step
         elif cfg.sparse_updates:
             # The sparse step donates its param buffers; copy once so a
             # caller-held pytree (e.g. for a later cold-start eval) survives.
-            params = jax.tree_util.tree_map(lambda x: jnp.asarray(x).copy(), params)
+            params = jax.tree_util.tree_map(
+                lambda x: jax.device_put(x).copy(), params
+            )
             opt_state = self._init_sparse_opt_state(params)
             step_fn = self._sparse_step
         else:
@@ -547,19 +572,23 @@ class Graph4RecTrainer:
         t0 = time.perf_counter()
         try:
             for step, (dev, npairs) in enumerate(batch_iter):
-                params, opt_state, loss = step_fn(params, opt_state, dev)
+                # Every dispatch runs under the transfer guard: batches were
+                # converted in the producer (device_batch) or ARE device
+                # values (fused keys), so any transfer here is a regression.
+                with transfer_sanitizer(cfg.sanitize_transfers):
+                    params, opt_state, loss = step_fn(params, opt_state, dev)
                 loss_hist.append(loss)
                 pairs_seen += npairs
                 if cfg.sync_every_step:
-                    float(loss)
+                    host_scalar(loss)
                 if (
                     cfg.loss_fetch_every
                     and len(loss_hist) >= cfg.loss_fetch_every + drain_tail
                 ):
                     done, loss_hist = loss_hist[:-drain_tail], loss_hist[-drain_tail:]
-                    losses.extend(float(l) for l in jax.device_get(done))
+                    losses.extend(host_floats(done))
                 if cfg.log_every and (step + 1) % cfg.log_every == 0:
-                    log.info("step %d loss %.4f", step + 1, float(loss))
+                    log.info("step %d loss %.4f", step + 1, host_scalar(loss))
                 if cfg.eval_every and (step + 1) % cfg.eval_every == 0:
                     evals.append(self.evaluate(params))
         except BaseException:
@@ -572,9 +601,9 @@ class Graph4RecTrainer:
             if prefetcher is not None:
                 prefetcher.close()
         if loss_hist:
-            jax.block_until_ready(loss_hist[-1])
+            device_barrier(loss_hist[-1])
         wall = time.perf_counter() - t0
-        losses.extend(float(l) for l in jax.device_get(loss_hist))
+        losses.extend(host_floats(loss_hist))
         if cfg.eval_at_end:
             evals.append(self.evaluate(params))
         return TrainResult(

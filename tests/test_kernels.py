@@ -129,3 +129,61 @@ class TestFlashAttention:
         got_u = chunked_gqa_attention(q, k, v, True, None, block_q=64, unroll=True)
         want = ref.attention_ref(q, k, v, causal=True)
         np.testing.assert_allclose(np.asarray(got_u), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.quick
+class TestTopkOracle:
+    """chunked_topk_pallas against its dense pure-jnp oracle (P003 pair)."""
+
+    @pytest.mark.parametrize("Q,I,k", [(16, 100, 10), (130, 300, 25)])
+    def test_matches_ref(self, Q, I, k):
+        from repro.kernels.topk import chunked_topk_pallas
+
+        q = rand(20, (Q, 32), jnp.float32)
+        it = rand(21, (I, 32), jnp.float32)
+        ex = jax.random.randint(jax.random.PRNGKey(22), (Q, 5), -1, I)
+        s0, i0 = ref.chunked_topk_ref(q, it, k, exclude=ex)
+        s1, i1 = chunked_topk_pallas(
+            q, it, k, exclude=ex, item_chunk=64, tile_q=32, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+    def test_no_exclude(self):
+        from repro.kernels.topk import chunked_topk_pallas
+
+        q = rand(23, (8, 16), jnp.float32)
+        it = rand(24, (50, 16), jnp.float32)
+        s0, i0 = ref.chunked_topk_ref(q, it, 7)
+        s1, i1 = chunked_topk_pallas(q, it, 7, item_chunk=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+@pytest.mark.quick
+class TestRowAdagradOracle:
+    """row_adagrad_scatter_pallas against its oracle (P003 pair): distinct
+    real ids, PADs first, untouched rows pass through."""
+
+    def test_matches_ref(self):
+        from repro.kernels.row_adagrad import row_adagrad_scatter_pallas
+
+        N, D, bucket = 64, 16, 12
+        table = rand(30, (N, D), jnp.float32)
+        accum = jnp.full((N, 1), 0.1, jnp.float32)
+        g = rand(31, (bucket, D), jnp.float32)
+        real = np.array([3, 9, 17, 40, 63], np.int32)
+        ids = jnp.asarray(
+            np.concatenate([np.full(bucket - len(real), -1, np.int32), real])
+        )
+        t0, a0 = ref.row_adagrad_scatter_ref(table, accum, ids, g, lr=0.2)
+        t1, a1 = row_adagrad_scatter_pallas(
+            table, accum, ids, g, lr=0.2, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(t0), np.asarray(t1), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(a0), np.asarray(a1), atol=1e-6)
+        # rows not named in ids are bitwise untouched
+        untouched = np.setdiff1d(np.arange(N), real)
+        np.testing.assert_array_equal(
+            np.asarray(t1)[untouched], np.asarray(table)[untouched]
+        )

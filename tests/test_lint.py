@@ -1,0 +1,489 @@
+"""repro.lint suite: golden findings per rule family on fixture snippets,
+suppression and baseline mechanics, cleanliness of the real repo, and the
+runtime transfer-guard sanitizer the static pass is paired with.
+
+Fixture files are written under tmp_path at their *repo-relative* paths
+(e.g. ``src/repro/train/trainer.py``) so the hot-path / kernel / test glob
+classifiers fire exactly as they do on the real tree.
+"""
+import pathlib
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.lint import core
+from repro.lint.core import load_baseline, new_findings, run_lint, write_baseline
+
+pytestmark = pytest.mark.quick
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def lint_snippet(tmp_path, rel, source):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_lint(tmp_path, paths=(rel,))
+
+
+def rule_ids(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ------------------------------------------------------------- determinism
+class TestDeterminismRules:
+    def test_d001_entropy_seed(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+            rng = np.random.default_rng()
+            """)
+        assert rule_ids(got) == ["D001"]
+
+    def test_d002_id_only_seed(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+
+            def subsample(v):
+                return np.random.default_rng(v).integers(0, 10)
+            """)
+        assert rule_ids(got) == ["D002"]
+        assert "partition_rng" in got[0].hint
+
+    def test_d002_spawn_key_idiom_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+
+            def subsample(seed, v):
+                return np.random.default_rng([seed, int(v)]).integers(0, 10)
+            """)
+        assert got == []
+
+    def test_d003_global_state(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+
+            def f(x):
+                np.random.shuffle(x)
+            """)
+        assert rule_ids(got) == ["D003"]
+
+    def test_d004_constant_prngkey_library_only(self, tmp_path):
+        src = """\
+            import jax
+
+            def init():
+                return jax.random.PRNGKey(0)
+            """
+        assert rule_ids(lint_snippet(tmp_path, "src/repro/foo.py", src)) == ["D004"]
+        # constant keys are the norm in tests
+        assert lint_snippet(tmp_path, "tests/test_foo.py", src) == []
+
+    def test_d005_key_reuse(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import jax
+
+            def f(key):
+                a = jax.random.normal(key, (2,))
+                b = jax.random.uniform(key, (2,))
+                return a + b
+            """)
+        assert rule_ids(got) == ["D005"]
+        assert got[0].line == 5  # the second consumer is the violation
+
+    def test_d005_split_and_fold_in_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import jax
+
+            def g(key):
+                k1, k2 = jax.random.split(key)
+                return jax.random.normal(k1, (2,)) + jax.random.uniform(k2, (2,))
+
+            def h(key, n):
+                outs = []
+                for i in range(n):
+                    k = jax.random.fold_in(key, i)
+                    outs.append(jax.random.normal(k, (2,)))
+                return outs
+            """)
+        assert got == []
+
+    def test_d005_loop_carried_reuse_caught(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import jax
+
+            def f(key, n):
+                outs = []
+                for i in range(n):
+                    outs.append(jax.random.normal(key, (2,)))
+                return outs
+            """)
+        assert rule_ids(got) == ["D005"]
+
+
+# ---------------------------------------------------------------- host sync
+_HOT_SNIPPET = """\
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def step(loss, xs):
+        a = float(loss)
+        b = loss.item()
+        c = np.asarray(loss)
+        jax.block_until_ready(loss)
+        d = jnp.asarray(xs)
+        return a, b, c, d
+    """
+
+
+class TestHostSyncRules:
+    def test_hot_path_module_flagged(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/train/trainer.py", _HOT_SNIPPET)
+        assert rule_ids(got) == ["H001", "H001", "H001", "H001", "H002"]
+
+    def test_service_glob_is_hot(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/graph/service/worker.py", """\
+            import jax
+
+            def f(x):
+                return float(x)
+            """)
+        assert rule_ids(got) == ["H001"]
+
+    def test_non_hot_module_clean(self, tmp_path):
+        assert lint_snippet(tmp_path, "src/repro/models/foo.py", _HOT_SNIPPET) == []
+
+    def test_h002_hint_names_device_put(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/sampling/fused.py", """\
+            import jax
+            import jax.numpy as jnp
+
+            def build(x):
+                return jnp.asarray(x)
+            """)
+        assert rule_ids(got) == ["H002"]
+        assert "device_put" in got[0].hint
+
+
+# ------------------------------------------------------------------- pallas
+class TestPallasRules:
+    def test_p001_underived_grid(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/kernels/mykern.py", """\
+            from jax.experimental import pallas as pl
+
+            def launch(kern, x):
+                B = x.shape[0]
+                return pl.pallas_call(kern, grid=(B // 8,))(x)
+            """)
+        assert rule_ids(got) == ["P001"]
+
+    def test_p001_divisibility_assert_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/kernels/mykern.py", """\
+            from jax.experimental import pallas as pl
+
+            def launch(kern, x):
+                B = x.shape[0]
+                assert B % 8 == 0
+                return pl.pallas_call(kern, grid=(B // 8,))(x)
+            """)
+        assert got == []
+
+    def test_p001_ceil_pad_idiom_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/kernels/mykern.py", """\
+            from jax.experimental import pallas as pl
+
+            def launch(kern, x):
+                B = x.shape[0]
+                Bp = -(-B // 8) * 8
+                return pl.pallas_call(kern, grid=(Bp // 8,))(x)
+            """)
+        assert got == []
+
+    def test_p002_alias_index_out_of_range(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/kernels/mykern.py", """\
+            import jax
+            from jax.experimental import pallas as pl
+
+            def launch(kern, x, y):
+                return pl.pallas_call(
+                    kern,
+                    grid=(4,),
+                    out_shape=[jax.ShapeDtypeStruct(x.shape, x.dtype)],
+                    input_output_aliases={5: 0},
+                )(x, y)
+            """)
+        assert "P002" in rule_ids(got)
+
+    def test_p003_kernel_without_ref_oracle(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/kernels/mykern.py", """\
+            def foo_pallas(x):
+                return x
+            """)
+        assert rule_ids(got) == ["P003"]
+
+    def test_p003_ref_oracle_satisfies(self, tmp_path):
+        ref = tmp_path / "src/repro/kernels/ref.py"
+        ref.parent.mkdir(parents=True, exist_ok=True)
+        ref.write_text("def foo_ref(x):\n    return x\n")
+        got = lint_snippet(tmp_path, "src/repro/kernels/mykern.py", """\
+            def foo_pallas(x):
+                return x
+            """)
+        assert got == []
+
+    def test_p004_pallas_call_outside_kernels(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/models/bar.py", """\
+            from jax.experimental import pallas as pl
+
+            def f(kern, x):
+                return pl.pallas_call(kern, grid=(1,))(x)
+            """)
+        assert rule_ids(got) == ["P004"]
+
+
+# ---------------------------------------------------------------- lifecycle
+class TestLifecycleRules:
+    def test_l001_unnamed_spawn(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import threading
+
+            def start(fn):
+                t = threading.Thread(target=fn, daemon=True)
+                t.start()
+                return t
+            """)
+        assert rule_ids(got) == ["L001"]
+
+    def test_l002_join_timeout_without_aliveness(self, tmp_path):
+        # exactly the silent-shutdown shape fixed in train/trainer.py
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            class Prefetcher:
+                def close(self):
+                    self._thread.join(timeout=5.0)
+            """)
+        assert rule_ids(got) == ["L002"]
+
+    def test_l002_aliveness_check_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            class Prefetcher:
+                def close(self):
+                    self._thread.join(timeout=5.0)
+                    if self._thread.is_alive():
+                        print("producer still running")
+            """)
+        assert got == []
+
+    def test_l003_bare_acquire_release(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import threading
+
+            _lock = threading.Lock()
+
+            def f():
+                _lock.acquire()
+                try:
+                    pass
+                finally:
+                    _lock.release()
+            """)
+        assert rule_ids(got) == ["L003", "L003"]
+
+    def test_l003_with_statement_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import threading
+
+            _lock = threading.Lock()
+
+            def f():
+                with _lock:
+                    pass
+            """)
+        assert got == []
+
+    def test_l004_shm_create_without_finalizer(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            from multiprocessing import shared_memory
+
+            def build():
+                return shared_memory.SharedMemory(create=True, size=64)
+            """)
+        assert rule_ids(got) == ["L004"]
+
+    def test_l004_finalizer_satisfies(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import weakref
+            from multiprocessing import shared_memory
+
+            def _unlink(name):
+                pass
+
+            def build():
+                seg = shared_memory.SharedMemory(create=True, size=64)
+                weakref.finalize(seg, _unlink, seg.name)
+                return seg
+            """)
+        assert got == []
+
+
+# ------------------------------------------------- suppression and baseline
+class TestSuppressionAndBaseline:
+    def test_inline_suppression(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+            rng = np.random.default_rng()  # repro: lint-ignore[D001]
+            """)
+        assert got == []
+
+    def test_comment_line_suppresses_next_line(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+            # repro: lint-ignore[D001]
+            rng = np.random.default_rng()
+            """)
+        assert got == []
+
+    def test_suppression_is_rule_scoped(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+            rng = np.random.default_rng()  # repro: lint-ignore[D003]
+            """)
+        assert rule_ids(got) == ["D001"]
+
+    def test_wildcard_suppression(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/foo.py", """\
+            import numpy as np
+            rng = np.random.default_rng()  # repro: lint-ignore[*]
+            """)
+        assert got == []
+
+    def test_clean_file_zero_findings(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/train/trainer.py", """\
+            import jax
+            import numpy as np
+
+            def step(fn, params, batch):
+                dev = jax.device_put(batch)
+                return fn(params, dev)
+
+            def make_rng(seed, part):
+                return np.random.default_rng([seed, part])
+            """)
+        assert got == []
+
+    def test_baseline_masks_only_recorded_findings(self, tmp_path):
+        rel = "src/repro/foo.py"
+        findings = lint_snippet(tmp_path, rel, """\
+            import numpy as np
+            rng = np.random.default_rng()
+            """)
+        bl_path = tmp_path / core.BASELINE_FILE
+        write_baseline(bl_path, findings)
+        # the recorded finding no longer counts as new...
+        assert new_findings(findings, load_baseline(bl_path)) == []
+        # ...surviving line drift (fingerprints are line-number free)...
+        findings2 = lint_snippet(tmp_path, rel, """\
+            import numpy as np
+
+            # an unrelated edit above the finding
+            rng = np.random.default_rng()
+            """)
+        assert new_findings(findings2, load_baseline(bl_path)) == []
+        # ...but a second, unrecorded violation does
+        findings3 = lint_snippet(tmp_path, rel, """\
+            import numpy as np
+            rng = np.random.default_rng()
+            rng2 = np.random.default_rng(7)  # constant seeds are D002-clean
+            other = np.random.default_rng()
+            """)
+        new = new_findings(findings3, load_baseline(bl_path))
+        assert rule_ids(new) == ["D001"]
+
+
+# -------------------------------------------------------------- repo status
+class TestRepoIsClean:
+    def test_no_findings_beyond_baseline(self):
+        findings = run_lint(REPO)
+        baseline = load_baseline(REPO / core.BASELINE_FILE)
+        fresh = new_findings(findings, baseline)
+        assert fresh == [], "\n".join(f.render() for f in fresh)
+
+    def test_hot_path_modules_have_empty_baseline(self):
+        """The acceptance bar: hot-path/kernel findings are FIXED, never
+        baselined or suppressed."""
+        baseline = load_baseline(REPO / core.BASELINE_FILE)
+        import fnmatch
+
+        guarded = core.HOT_PATH_GLOBS + (core.KERNEL_GLOB,)
+        for (rule, path, _ctx, _snip) in baseline:
+            assert not any(fnmatch.fnmatch(path, g) for g in guarded), (
+                f"baselined {rule} in guarded module {path}"
+            )
+        for g in guarded:
+            for f in REPO.glob(g):
+                assert "lint-ignore" not in f.read_text(), (
+                    f"suppression comment in guarded module {f}"
+                )
+
+
+# ------------------------------------------------------- runtime sanitizer
+class TestTransferSanitizer:
+    def test_guard_blocks_implicit_h2d(self):
+        import jax
+
+        from repro.lint.sanitizer import transfer_sanitizer
+
+        f = jax.jit(lambda x: x + 1)
+        f(jax.device_put(np.ones(4)))  # compile outside the guard
+        with pytest.raises(Exception, match="Disallowed host-to-device"):
+            with transfer_sanitizer(True):
+                f(np.ones(4))
+
+    def test_explicit_device_put_stays_legal(self):
+        import jax
+
+        from repro.lint.sanitizer import host_scalar, transfer_sanitizer
+
+        f = jax.jit(lambda x: x.sum())
+        f(jax.device_put(np.ones(4)))
+        with transfer_sanitizer(True):
+            out = f(jax.device_put(np.ones(4)))
+        assert host_scalar(out) == 4.0
+
+    def test_disabled_guard_is_noop(self):
+        import jax
+
+        from repro.lint.sanitizer import transfer_sanitizer
+
+        f = jax.jit(lambda x: x + 1)
+        with transfer_sanitizer(False):
+            f(np.ones(4))
+
+
+class TestTrainerUnderGuard:
+    """The trainer's step loop dispatches under the guard by default; both
+    sampling backends must train green with it enabled."""
+
+    @pytest.mark.parametrize("backend", ["host", "fused"])
+    def test_short_train_green(self, toy_ds, make_model_cfg, backend):
+        from repro.graph import DistributedGraphEngine
+        from repro.sampling import EgoConfig, PairConfig, PipelineConfig
+        from repro.train import Graph4RecTrainer, TrainerConfig
+        from repro.walk import WalkConfig
+
+        g = toy_ds.graph
+        pc = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+            pair=PairConfig(win_size=2),
+            ego=EgoConfig(relations=["u2click2i", "i2click2u"], fanouts=[4, 3]),
+            batch_pairs=64, walks_per_round=16,
+        )
+        eng = DistributedGraphEngine(g, num_partitions=2)
+        tr = Graph4RecTrainer(
+            toy_ds, eng, make_model_cfg(g), pc,
+            TrainerConfig(num_steps=4, log_every=0, eval_at_end=False,
+                          sampling_backend=backend, sanitize_transfers=True),
+        )
+        res = tr.train()
+        assert len(res.losses) == 4
+        assert np.all(np.isfinite(res.losses))
