@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize
+.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize bench-attr
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -28,3 +28,6 @@ bench-walk:
 
 bench-sanitize:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --sanitize
+
+bench-attr:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --attribution

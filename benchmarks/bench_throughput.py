@@ -51,61 +51,86 @@ def _seed_loop_padding():
         table_mod.pad_slot_values = orig
 
 
+def _median(xs):
+    s = sorted(xs)
+    return s[len(s) // 2]
+
+
 def pipeline_throughput(quick: bool = True, results: Dict = None) -> None:
-    """Serial seed path vs overhauled path, per model family.
+    """Serial seed path vs overhauled path vs auto-selected path, per model
+    family.
 
     The serial arm reproduces the seed end to end: no prefetch thread, a
     device sync every step, loop-built engine partitions, per-node Python
     slot padding, 'values' (padded gather+sum) side info, and the dense
     full-table grad step (sparse_updates=False). The prefetch arm is the
-    production path: background prefetch, no per-step sync, vectorized
-    engine build/padding, 'bag' side info and the sparse gather→step→scatter
-    grad step. Each arm runs twice, alternating, and the best run counts
-    (tames CPU noise).
+    explicit production path: background prefetch, double-buffered H2D
+    staging, async loss readback. The auto arm leaves prefetch to the
+    calibrated backend plan (``auto_backend``) — for cheap samplers (the
+    walk-based family) it degrades to the serial loop instead of paying a
+    queue handoff that costs more than it hides. Arms are measured
+    INTERLEAVED and speedups are per-rep ratios (median reported), so
+    shared-host throughput drift cancels out.
     """
     ds = dataset("toy" if quick else "rec15")
     steps = 60 if quick else 200
+    reps = 3
     arms = (
         ("walk-based", dict(gnn_type=None)),
         ("gnn-lightgcn", dict(gnn_type="lightgcn")),
         ("gnn-side-info", dict(gnn_type="lightgcn", side_info=True)),
     )
     for name, kw in arms:
-        tr_serial = trainer(
-            ds, steps=steps, prefetch_batches=0, sync_every_step=True,
-            eval_at_end=False, engine_build="loop", slot_mode="values",
-            sparse_updates=False, **kw,
-        )
-        tr_fast = trainer(
-            ds, steps=steps, prefetch_batches=3, sync_every_step=False,
-            eval_at_end=False, **kw,
-        )
-        best: Dict[str, float] = {}
+        trainers = {
+            "serial": trainer(
+                ds, steps=steps, prefetch_batches=0, sync_every_step=True,
+                eval_at_end=False, engine_build="loop", slot_mode="values",
+                sparse_updates=False, **kw,
+            ),
+            "prefetch": trainer(
+                ds, steps=steps, prefetch_batches=3, sync_every_step=False,
+                eval_at_end=False, **kw,
+            ),
+            "auto": trainer(
+                ds, steps=steps, prefetch_batches=None, auto_backend=True,
+                sync_every_step=False, eval_at_end=False, **kw,
+            ),
+        }
+        wall: Dict[str, list] = {m: [] for m in trainers}
         pairs: Dict[str, int] = {}
-        with _seed_loop_padding():
-            tr_serial.train()  # compile + warm
-        tr_fast.train()
-        for _ in range(2):
-            with _seed_loop_padding():
-                res = tr_serial.train()
-            best["serial"] = min(best.get("serial", 1e9), res.wall_time_s)
-            pairs["serial"] = res.pairs_seen
-            res = tr_fast.train()
-            best["prefetch"] = min(best.get("prefetch", 1e9), res.wall_time_s)
-            pairs["prefetch"] = res.pairs_seen
+        for mode, tr in trainers.items():  # compile + warm (+ calibrate)
+            with _seed_loop_padding() if mode == "serial" else contextlib.nullcontext():
+                tr.train()
+        for _ in range(reps):
+            for mode, tr in trainers.items():
+                with _seed_loop_padding() if mode == "serial" else contextlib.nullcontext():
+                    res = tr.train()
+                wall[mode].append(res.wall_time_s)
+                pairs[mode] = res.pairs_seen
+        best = {m: min(w) for m, w in wall.items()}
         pps = {m: pairs[m] / best[m] for m in best}
-        for mode in ("serial", "prefetch"):
+        for mode in trainers:
             emit(
                 f"throughput/{name}/{mode}", best[mode] / steps * 1e6,
                 f"pairs_per_sec={pps[mode]:.0f}",
             )
-        speedup = pps["prefetch"] / pps["serial"]
-        emit(f"throughput/{name}/speedup", 0.0, f"speedup={speedup:.2f}x")
+        ratios = {
+            m: _median([s / w for s, w in zip(wall["serial"], wall[m])])
+            for m in ("prefetch", "auto")
+        }
+        emit(f"throughput/{name}/speedup", 0.0,
+             f"speedup={ratios['prefetch']:.2f}x")
+        emit(f"throughput/{name}/speedup_auto", 0.0,
+             f"speedup={ratios['auto']:.2f}x "
+             f"plan_prefetch={trainers['auto']._plan['prefetch']}")
         if results is not None:
             results[f"pipeline/{name}"] = {
                 "pairs_per_sec_serial": round(pps["serial"], 1),
                 "pairs_per_sec_prefetch": round(pps["prefetch"], 1),
-                "speedup": round(speedup, 3),
+                "pairs_per_sec_auto": round(pps["auto"], 1),
+                "speedup": round(ratios["prefetch"], 3),
+                "speedup_auto": round(ratios["auto"], 3),
+                "auto_plan_prefetch": trainers["auto"]._plan["prefetch"],
             }
 
 
@@ -380,22 +405,40 @@ def engine_service_bench(quick: bool = True, results: Dict = None) -> None:
     emit("engine_service/speedup_mp4", 0.0, f"speedup={speedup:.2f}x")
     out["speedup_mp4_vs_inproc"] = speedup
 
-    # ---- end-to-end pipeline pairs/sec per backend (informational)
+    # ---- end-to-end pipeline pairs/sec per backend. Interleaved per-rep
+    # wall-clock ratios (median), like the component arms above: the two
+    # trainers alternate inside each rep so machine drift cancels.
     steps = 40 if quick else 120
-    pipe: Dict[str, float] = {}
-    for backend, workers in (("inproc", 0), ("mp", 2)):
-        tr = trainer(
+    e2e_reps = 5
+    trainers = {
+        backend: trainer(
             ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
             engine_backend=backend, num_engine_workers=workers,
         )
-        with tr:
+        for backend, workers in (("inproc", 0), ("mp", 2))
+    }
+    walls: Dict[str, list] = {m: [] for m in trainers}
+    try:
+        for tr in trainers.values():
             tr.train()  # compile + warm
-            best = min(tr.train().wall_time_s for _ in range(2))
-        pipe[backend] = tr.cfg.num_steps * tr.pipe_cfg.batch_pairs / best
+        for _ in range(e2e_reps):
+            for backend, tr in trainers.items():
+                walls[backend].append(tr.train().wall_time_s)
+    finally:
+        for tr in trainers.values():
+            tr.close()
+    pipe = {
+        m: steps * trainers[m].pipe_cfg.batch_pairs / min(w)
+        for m, w in walls.items()
+    }
+    for backend in trainers:
         emit(f"engine_service/pipeline_{backend}", 0.0,
              f"pairs_per_sec={pipe[backend]:.0f}")
+    mp_ratio = sorted(
+        i / m for i, m in zip(walls["inproc"], walls["mp"])
+    )[e2e_reps // 2]
     out["pipeline_pairs_per_sec"] = {m: round(v, 1) for m, v in pipe.items()}
-    out["pipeline_mp_speedup"] = round(pipe["mp"] / pipe["inproc"], 3)
+    out["pipeline_mp_speedup"] = round(mp_ratio, 3)
     if results is not None:
         results["engine_service"] = out
 
@@ -486,23 +529,91 @@ def walk_fusion_bench(quick: bool = True, results: Dict = None) -> None:
             "speedup_median": round(med, 3),
         }
 
-    # ---- end-to-end trainer pairs/sec per sampling backend (informational)
+    # ---- end-to-end trainer pairs/sec per sampling backend. Interleaved
+    # per-rep wall-clock ratios (median), same methodology as the component
+    # arms: both trainers run inside each rep so machine drift cancels.
     steps = 40 if quick else 100
-    pipe: Dict[str, float] = {}
-    for backend in ("host", "fused"):
-        tr = trainer(
+    e2e_reps = 5
+    trainers = {
+        backend: trainer(
             ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
             batch_pairs=batch_pairs, sampling_backend=backend,
         )
+        for backend in ("host", "fused")
+    }
+    walls: Dict[str, list] = {m: [] for m in trainers}
+    for tr in trainers.values():
         tr.train()  # compile + warm
-        best = min(tr.train().wall_time_s for _ in range(2))
-        pipe[backend] = steps * batch_pairs / best
+    for _ in range(e2e_reps):
+        for backend, tr in trainers.items():
+            walls[backend].append(tr.train().wall_time_s)
+    pipe = {m: steps * batch_pairs / min(w) for m, w in walls.items()}
+    for backend in trainers:
         emit(f"walk_fusion/pipeline_{backend}", 0.0,
              f"pairs_per_sec={pipe[backend]:.0f}")
+    fused_ratio = sorted(
+        h / f for h, f in zip(walls["host"], walls["fused"])
+    )[e2e_reps // 2]
     out["pipeline_pairs_per_sec"] = {m: round(v, 1) for m, v in pipe.items()}
-    out["pipeline_fused_speedup"] = round(pipe["fused"] / pipe["host"], 3)
+    out["pipeline_fused_speedup"] = round(fused_ratio, 3)
     if results is not None:
         results["walk_fusion"] = out
+
+
+def attribution_bench(quick: bool = True, results: Dict = None) -> None:
+    """Per-step time attribution (`--attribution` / `make bench-attr`).
+
+    Runs the trainer with ``TrainerConfig.attribution`` on for every
+    {engine backend} x {loop mode} combination — inproc/mp x
+    serial/prefetch/fused — and records each run's PhaseTimer summary
+    (sample / assemble / batch_wait / h2d / dispatch / loss_fetch, plus
+    consumer-visible vs device-residual wall time) into the
+    ``step_attribution`` section of BENCH_throughput.json. This is the
+    measuring instrument behind the throughput work: it shows WHERE a
+    step's wall time goes per configuration, so regressions like "mp is
+    2.4x faster at sampling but 0.8x end-to-end" decompose into the phase
+    that actually ate the difference. Timing is sync-free (ring-buffered
+    host timestamps; the only device barrier is the trainer's end-of-run
+    drain), so the instrumented runs are faithful to production behavior.
+    """
+    ds = dataset("toy" if quick else "rec15")
+    steps = 48 if quick else 150
+    combos = [
+        ("inproc", "serial", dict(prefetch_batches=0)),
+        ("inproc", "prefetch", dict(prefetch_batches=2)),
+        ("inproc", "fused", dict(sampling_backend="fused")),
+        ("mp", "serial", dict(engine_backend="mp", prefetch_batches=0)),
+        ("mp", "prefetch", dict(engine_backend="mp", prefetch_batches=2)),
+        ("mp", "fused", dict(engine_backend="mp", sampling_backend="fused")),
+    ]
+    out: Dict = {"dataset": ds.spec.name, "steps": steps}
+    for eng_name, mode, kw in combos:
+        tr = trainer(
+            ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
+            attribution=True, **kw,
+        )
+        with tr:
+            tr.train()  # compile + warm
+            res = tr.train()
+        combo = f"{eng_name}/{mode}"
+        summary = dict(res.attribution)
+        summary["plan"] = {
+            k: res.plan[k] for k in ("sampling", "prefetch", "engine_backend")
+        }
+        out[combo] = summary
+        emit(f"attr/{combo}/wall", summary["wall_us_per_step"],
+             f"steps={summary['steps']}")
+        for phase, entry in summary["phases"].items():
+            emit(
+                f"attr/{combo}/{phase}", entry["per_call_us"],
+                f"frac_of_wall={entry.get('frac_of_wall', 0.0):.3f}",
+            )
+        emit(
+            f"attr/{combo}/device_residual", 0.0,
+            f"frac_of_wall={summary['device_residual_s'] / summary['wall_s']:.3f}",
+        )
+    if results is not None:
+        results["step_attribution"] = out
 
 
 def sanitize_bench(quick: bool = True, results: Dict = None) -> None:
@@ -588,6 +699,7 @@ def run(quick: bool = True) -> Dict:
     sparse_step_bench(quick, results)
     engine_service_bench(quick, results)
     walk_fusion_bench(quick, results)
+    attribution_bench(quick, results)
     kernel_micro(quick, results)
     with open(_JSON_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
@@ -629,6 +741,12 @@ def run_sanitize_only(quick: bool = True) -> Dict:
     return _run_one_arm(sanitize_bench, quick)
 
 
+def run_attr_only(quick: bool = True) -> Dict:
+    """`--attribution` / `make bench-attr`: the per-step attribution arm,
+    merged into the JSON."""
+    return _run_one_arm(attribution_bench, quick)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     grp = ap.add_mutually_exclusive_group()
@@ -644,6 +762,8 @@ if __name__ == "__main__":
                      help="run only the fused-vs-host sampling arm")
     arm.add_argument("--sanitize", action="store_true",
                      help="run only the transfer-guard sanitizer arm")
+    arm.add_argument("--attribution", action="store_true",
+                     help="run only the per-step time-attribution arm")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.step:
@@ -654,5 +774,7 @@ if __name__ == "__main__":
         run_walk_only(quick=not args.full)
     elif args.sanitize:
         run_sanitize_only(quick=not args.full)
+    elif args.attribution:
+        run_attr_only(quick=not args.full)
     else:
         run(quick=not args.full)

@@ -38,16 +38,23 @@ def trainer(
     num_negatives: int = 5,
     seed: int = 0,
     num_partitions: int = 4,
-    prefetch_batches: int = 2,
+    prefetch_batches: Optional[int] = 2,
     sync_every_step: bool = False,
     eval_at_end: bool = True,
     engine_build: str = "vectorized",
     slot_mode: str = "bag",
     sparse_updates: bool = True,
+    # Benchmarks pin their arms explicitly by default; pass auto_backend=True
+    # (plus prefetch_batches=None / sampling_backend="auto") for the
+    # calibrated-selection arm.
+    auto_backend: bool = False,
+    sparse_min_rows: int = 32768,
     engine_backend: str = "inproc",
     num_engine_workers: int = 2,
+    engine_local_threshold: int = 8192,
     sampling_backend: str = "host",
     sanitize_transfers: bool = True,
+    attribution: bool = False,
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -88,12 +95,16 @@ def trainer(
                       prefetch_batches=prefetch_batches,
                       sync_every_step=sync_every_step,
                       sparse_updates=sparse_updates,
+                      auto_backend=auto_backend,
+                      sparse_min_rows=sparse_min_rows,
                       eval_at_end=eval_at_end,
                       engine_backend=engine_backend,
                       num_engine_workers=num_engine_workers,
+                      engine_local_threshold=engine_local_threshold,
                       num_engine_partitions=num_partitions,
                       sampling_backend=sampling_backend,
-                      sanitize_transfers=sanitize_transfers),
+                      sanitize_transfers=sanitize_transfers,
+                      attribution=attribution),
     )
 
 

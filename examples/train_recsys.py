@@ -44,12 +44,28 @@ def main() -> None:
                     help="'mp' serves partitions from shared-memory worker "
                          "processes (graph/service) instead of in-process")
     ap.add_argument("--sampling-backend", default="host",
-                    choices=["host", "fused"],
+                    choices=["host", "fused", "auto"],
                     help="'fused' runs walk->pair->ego as one jitted device "
                          "program when the graph fits the padded-adjacency "
-                         "budget (falls back to 'host' otherwise)")
+                         "budget (falls back to 'host' otherwise); 'auto' "
+                         "lets start-of-run calibration choose")
+    ap.add_argument("--prefetch-batches", type=int, default=None,
+                    help="prefetch queue depth; 0 = serial loop; unset = let "
+                         "the calibrated backend plan decide "
+                         "(docs/throughput.md)")
+    ap.add_argument("--no-auto-backend", action="store_true",
+                    help="skip start-of-run calibration; use the legacy "
+                         "fixed prefetch depth unless --prefetch-batches")
+    ap.add_argument("--attribution", action="store_true",
+                    help="record per-step phase timings (sample/assemble/"
+                         "h2d/dispatch/...) and print the breakdown after "
+                         "training")
     ap.add_argument("--engine-workers", type=int, default=2,
                     help="worker processes for --engine-backend=mp")
+    ap.add_argument("--engine-local-threshold", type=int, default=8192,
+                    help="mp backend: rounds with at most this many total "
+                         "nodes are served in-process over the client's own "
+                         "shard views (0 = every round goes to a worker)")
     ap.add_argument("--warm-start", default=None, help="npz of pre-trained tables")
     ap.add_argument("--save", default=None)
     ap.add_argument("--eval-recall", default="device",
@@ -116,7 +132,11 @@ def main() -> None:
                       seed=args.seed, engine_backend=args.engine_backend,
                       num_engine_workers=args.engine_workers,
                       num_engine_partitions=args.partitions,
+                      engine_local_threshold=args.engine_local_threshold,
                       sampling_backend=args.sampling_backend,
+                      prefetch_batches=args.prefetch_batches,
+                      auto_backend=not args.no_auto_backend,
+                      attribution=args.attribution,
                       eval_method=args.eval_recall,
                       eval_max_users=args.eval_max_users),
     )
@@ -134,6 +154,16 @@ def main() -> None:
         # trainer.engine is the GraphClient when --engine-backend=mp; its
         # stats mirror the in-process engine's counters exactly
         eng = trainer.engine
+        print("plan:", result.plan["reason"])
+        if result.attribution:
+            a = result.attribution
+            print(f"attribution ({a['steps']} steps, "
+                  f"{a['wall_us_per_step']:.0f}us/step, device residual "
+                  f"{a['device_residual_s'] / a['wall_s']:.0%}):")
+            for phase, entry in a["phases"].items():
+                print(f"  {phase:<11} {entry['per_call_us']:>10.1f}us/call "
+                      f"x{entry['count']:<6} "
+                      f"frac_of_wall={entry.get('frac_of_wall', 0.0):.3f}")
         print("recall:", {k: round(v, 4) for k, v in result.eval_history[-1].items()})
         print(f"engine: {eng.stats.neighbor_requests} neighbor requests, "
               f"{eng.stats.cross_partition_requests} cross-partition")
@@ -141,7 +171,8 @@ def main() -> None:
             agg = eng.aggregate_stats()
             print(f"workers: {agg['num_workers']} procs served "
                   f"{agg['neighbor_requests']} queries in {agg['batches']} "
-                  f"request rounds ({agg['busy_s']:.2f}s busy)")
+                  f"request rounds ({agg['busy_s']:.2f}s busy, "
+                  f"{agg['local_neighbor_requests']} answered in-process)")
     if args.save:
         print("saved", checkpoint.save(args.save, result.params))
     if args.export_embeddings:

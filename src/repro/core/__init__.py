@@ -3,6 +3,7 @@ from repro.core.hetero import HeteroGNNConfig, init_hetero_params, hetero_forwar
 from repro.core.loss import neg_sampling_loss, inbatch_softmax_loss, inbatch_sigmoid_loss
 from repro.core.model import (
     Graph4RecConfig, init_model_params, loss_fn, encode_ids, encode_ego,
-    device_batch, encode_all_nodes, split_params, sparse_dense_split,
+    device_batch, host_batch, sparse_device_batch, sparse_host_batch,
+    encode_all_nodes, split_params, sparse_dense_split,
 )
 from repro.core.recall import evaluate_recall

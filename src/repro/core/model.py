@@ -212,8 +212,16 @@ def slot_count_arrays(graph, cfg: Graph4RecConfig) -> Dict[str, jnp.ndarray]:
 # ---------------------------------------------------------------------- loss
 def loss_fn(params: Params, cfg: Graph4RecConfig, batch: Mapping) -> jnp.ndarray:
     slot_counts = batch.get("slot_counts")
-    h_src = encode(params, cfg, batch["src"], slot_counts)
-    h_dst = encode(params, cfg, batch["dst"], slot_counts)
+    if "shared" in batch:
+        # Shared-tower layout (fused walk_ego_pair): encode the unique
+        # ego towers once, then gather per-pair embeddings by index.
+        # Row-independent encoder => identical to encoding gathered towers.
+        h_all = encode(params, cfg, batch["shared"], slot_counts)
+        h_src = h_all[batch["src_sel"]]
+        h_dst = h_all[batch["dst_sel"]]
+    else:
+        h_src = encode(params, cfg, batch["src"], slot_counts)
+        h_dst = encode(params, cfg, batch["dst"], slot_counts)
     if cfg.loss == "inbatch_softmax":
         return loss_lib.inbatch_softmax_loss(
             h_src, h_dst, cfg.temperature, use_kernel=cfg.use_kernel_loss
@@ -246,16 +254,62 @@ def _values_mode(cfg: Graph4RecConfig) -> bool:
     return bool(value_slot_specs(cfg))
 
 
-def _ego_arrays(graph, ego: EgoBatch, cfg: Graph4RecConfig):
-    levels = [jnp.asarray(l) for l in ego.levels]
+def _ego_arrays_np(graph, ego: EgoBatch, cfg: Graph4RecConfig):
+    """One ego part as HOST numpy arrays (no H2D here — see host_batch)."""
+    levels = list(ego.levels)
     slots = None
     vspecs = value_slot_specs(cfg)
     if vspecs:
         slots = [_slots_for_ids(graph, l, vspecs) for l in ego.levels]
-        slots = [
-            {k: jnp.asarray(v) for k, v in s.items()} for s in slots
-        ]
     return (levels, slots)
+
+
+def _ego_arrays(graph, ego: EgoBatch, cfg: Graph4RecConfig):
+    return jax.device_put(_ego_arrays_np(graph, ego, cfg))
+
+
+def host_batch(
+    graph,
+    batch: TrainBatch,
+    cfg: Graph4RecConfig,
+    slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
+) -> Dict:
+    """Convert a TrainBatch into a HOST numpy pytree, jit-shaped.
+
+    This is the assemble stage of the trainer pipeline: everything a batch
+    needs except the H2D transfer itself. The trainer's prefetch producer
+    runs this (overlapping device compute) and the consumer-side stager
+    performs the one explicit ``jax.device_put`` per batch — so transfers
+    never hide inside a producer thread where neither the transfer guard
+    nor a profiler can see them. ``device_batch`` composes the two for
+    callers that want the old single-call behavior.
+
+    In 'bag' slot mode no per-value padding happens here at all — side info
+    rides along as the (cached, possibly already device-resident) count
+    matrices from ``slot_count_arrays``. Callers that loop over batches
+    should build those once and pass them in; they are computed on the fly
+    otherwise.
+    """
+    out: Dict = {}
+    bspecs, vspecs = _split_slot_specs(cfg)
+    if bspecs and slot_counts is None:
+        slot_counts = slot_count_arrays(graph, cfg)
+    if cfg.is_walk_based:
+        for name, ids in (("src", batch.src_ids), ("dst", batch.dst_ids)):
+            slots = _slots_for_ids(graph, ids, vspecs) if vspecs else None
+            out[name] = (ids, slots)
+        if batch.neg_ids is not None:
+            ids = batch.neg_ids.reshape(-1)
+            slots = _slots_for_ids(graph, ids, vspecs) if vspecs else None
+            out["neg"] = (ids, slots)
+    else:
+        out["src"] = _ego_arrays_np(graph, batch.src_ego, cfg)
+        out["dst"] = _ego_arrays_np(graph, batch.dst_ego, cfg)
+        if batch.neg_ego is not None:
+            out["neg"] = _ego_arrays_np(graph, batch.neg_ego, cfg)
+    if bspecs:
+        out["slot_counts"] = dict(slot_counts)
+    return out
 
 
 def device_batch(
@@ -264,51 +318,18 @@ def device_batch(
     cfg: Graph4RecConfig,
     slot_counts: Optional[Mapping[str, jnp.ndarray]] = None,
 ) -> Dict:
-    """Convert a host TrainBatch into jit-consumable arrays.
-
-    In 'bag' slot mode no per-value padding happens here at all — side info
-    rides along as the (cached) count matrices from ``slot_count_arrays``.
-    Callers that loop over batches should build those once and pass them in;
-    they are computed on the fly otherwise.
-    """
-    out: Dict = {}
-    bspecs, vspecs = _split_slot_specs(cfg)
-    if bspecs and slot_counts is None:
-        slot_counts = slot_count_arrays(graph, cfg)
-    if cfg.is_walk_based:
-        for name, ids in (("src", batch.src_ids), ("dst", batch.dst_ids)):
-            slots = (
-                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, vspecs).items()}
-                if vspecs
-                else None
-            )
-            out[name] = (jnp.asarray(ids), slots)
-        if batch.neg_ids is not None:
-            ids = batch.neg_ids.reshape(-1)
-            slots = (
-                {k: jnp.asarray(v) for k, v in _slots_for_ids(graph, ids, vspecs).items()}
-                if vspecs
-                else None
-            )
-            out["neg"] = (jnp.asarray(ids), slots)
-    else:
-        out["src"] = _ego_arrays(graph, batch.src_ego, cfg)
-        out["dst"] = _ego_arrays(graph, batch.dst_ego, cfg)
-        if batch.neg_ego is not None:
-            out["neg"] = _ego_arrays(graph, batch.neg_ego, cfg)
-    if bspecs:
-        out["slot_counts"] = dict(slot_counts)
-    return out
+    """``host_batch`` + one explicit H2D transfer of the whole pytree."""
+    return jax.device_put(host_batch(graph, batch, cfg, slot_counts))
 
 
 # ------------------------------------------- sparse (gather→step→scatter) path
-def sparse_device_batch(
+def sparse_host_batch(
     graph,
     batch: TrainBatch,
     cfg: Graph4RecConfig,
     buckets: Optional[Dict[str, int]] = None,
 ) -> Dict:
-    """``device_batch`` under the gather→step→scatter contract.
+    """``host_batch`` under the gather→step→scatter contract.
 
     Same structure as ``device_batch`` — so ``loss_fn`` runs unchanged — but
     every id is remapped onto rows of a per-table gathered sub-table, and
@@ -388,18 +409,18 @@ def sparse_device_batch(
             slots = None
             if vm:
                 slots = {
-                    sn: jnp.asarray(emb.remap_ids(uniq[f"slot:{sn}"], arr))
+                    sn: emb.remap_ids(uniq[f"slot:{sn}"], arr)
                     for sn, arr in part_slots[pname].items()
                 }
-            out[pname] = (jnp.asarray(local), slots)
+            out[pname] = (local, slots)
     else:
         for pname, ego in parts.items():
-            levels = [jnp.asarray(emb.remap_ids(uniq_node, l)) for l in ego.levels]
+            levels = [emb.remap_ids(uniq_node, l) for l in ego.levels]
             slots = None
             if vm:
                 slots = [
                     {
-                        sn: jnp.asarray(emb.remap_ids(uniq[f"slot:{sn}"], arr))
+                        sn: emb.remap_ids(uniq[f"slot:{sn}"], arr)
                         for sn, arr in lv.items()
                     }
                     for lv in part_slots[pname]
@@ -421,10 +442,20 @@ def sparse_device_batch(
                 )
                 cols = emb.remap_ids(u, vals)
                 np.add.at(cmat, (rows[valid], cols[valid]), 1.0)
-            out["slot_counts"][spec.name] = jnp.asarray(cmat)
+            out["slot_counts"][spec.name] = cmat
 
-    out["uniq"] = {k: jnp.asarray(v) for k, v in uniq.items()}
+    out["uniq"] = dict(uniq)
     return out
+
+
+def sparse_device_batch(
+    graph,
+    batch: TrainBatch,
+    cfg: Graph4RecConfig,
+    buckets: Optional[Dict[str, int]] = None,
+) -> Dict:
+    """``sparse_host_batch`` + one explicit H2D transfer of the pytree."""
+    return jax.device_put(sparse_host_batch(graph, batch, cfg, buckets))
 
 
 # ------------------------------------------------------------- full inference

@@ -30,6 +30,11 @@ Request flow (the paper's batched-RPC graph servers):
   bounds pipelining depth.
 - ``sample_many`` / ``sample_neighbors`` are the synchronous wrappers the
   walker, ego sampler, and pipeline consume unchanged.
+- with ``local_threshold > 0`` the client serves *small* rounds itself from
+  zero-copy views over its own shard segments (hybrid serving): tiny rounds
+  are latency-bound, and skipping the pipe round-trip beats any worker on
+  hosts where workers share cores with the trainer. The sampling core and
+  seeding are exactly the worker's, so results stay bitwise identical.
 
 Every failure mode raises ``EngineWorkerError`` (worker traceback, death, or
 timeout) rather than blocking: the trainer's prefetch thread propagates it
@@ -51,7 +56,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.graph.engine import SEED_BOUND, EngineStats
+from repro.graph.engine import (
+    SEED_BOUND,
+    EngineStats,
+    partition_rng,
+    sample_csr_rows,
+)
 from repro.graph.service import shm as shm_lib
 from repro.graph.service.worker import worker_main
 
@@ -137,6 +147,7 @@ class GraphClient:
         slab_slots: int = 8,
         slot_bytes: int = 4 << 20,
         pin_workers: bool = False,
+        local_threshold: int = 0,
     ):
         """``slab_slots`` x ``slot_bytes`` is each worker's slab geometry: a
         ring of slots that request/reply payloads land in. In-flight requests
@@ -160,6 +171,17 @@ class GraphClient:
 
         Either way the per-(query, partition) seeding is identical, so
         sampling results are bitwise independent of the dispatch mode.
+
+        ``local_threshold`` (0 = off) enables *hybrid serving*: a
+        ``sample_many`` round whose total node count is at or below the
+        threshold is answered in-process over zero-copy views of the
+        client's own shard segments, using the exact worker sampling core
+        (``sample_csr_rows`` + ``partition_rng``) — bitwise identical to a
+        worker reply by construction. Small rounds (a walker step over a
+        few hundred frontier nodes) are latency-bound, not throughput-bound:
+        a pipe round-trip costs more than the sampling itself, and on hosts
+        where workers share cores with the trainer the IPC is pure loss.
+        Large rounds still go to the worker fleet.
         """
         if hasattr(graph, "graph"):  # accept a DistributedGraphEngine
             engine = graph
@@ -179,6 +201,15 @@ class GraphClient:
         self.dispatch = dispatch
         self.slab_slots = int(slab_slots)
         self.slot_bytes = int(slot_bytes)
+        self.local_threshold = int(local_threshold)
+        # served-side counters for the hybrid local path, folded into
+        # aggregate_stats so the served == issued invariant keeps holding
+        # when some rounds never reach a worker
+        self._local_lock = threading.Lock()
+        self._local_stats = {
+            "neighbor_requests": 0, "sub_requests": 0, "batches": 0,
+            "busy_ns": 0,
+        }
 
         # Everything allocated below (shm segments, worker processes) is
         # reaped if ANY construction step fails — a failed __init__ must not
@@ -194,6 +225,12 @@ class GraphClient:
                 seg, manifest = shm_lib.build_shard(graph, p, self.num_partitions)
                 self._segs.append(seg)
                 manifests.append(manifest)
+            # zero-copy views over our own shard segments: the hybrid local
+            # path serves small rounds from these (address space, not memory)
+            self._local_views = [
+                shm_lib.manifest_views(self._segs[p], manifests[p])
+                for p in range(self.num_partitions)
+            ]
             self._slabs = []
             for _ in range(self.num_workers):
                 slab = shared_memory.SharedMemory(
@@ -600,9 +637,81 @@ class GraphClient:
         return pending.outs
 
     # ----------------------------------------------------------- engine API
+    def _sample_local(
+        self, rng: np.random.Generator, queries: Sequence[Tuple]
+    ) -> List[np.ndarray]:
+        """Serve one query group in-process over the client's shard views.
+
+        Mirrors the worker exactly — one seed per query drawn in order from
+        the caller's generator, owner routing via ``_route``, and
+        ``sample_csr_rows(..., degs_all=...)`` under
+        ``partition_rng(seed, p)`` per partition — so the reply is bitwise
+        identical to what the worker fleet would have produced, and the
+        caller's RNG stream advances identically either way.
+        """
+        if self._closed:
+            raise RuntimeError("GraphClient is shut down")
+        t0 = time.monotonic_ns()
+        P = self.num_partitions
+        outs: List[np.ndarray] = []
+        served = 0
+        subs = 0
+        # Mask routing (not submit's argsort): for a local reply there is no
+        # wire payload to pack, and the engine-style per-partition masks are
+        # cheaper. Draws are bitwise unchanged either way — a stable argsort
+        # groups by owner preserving in-partition order, so the rows each
+        # partition_rng(seed, p) sees are identical. Queries sharing one
+        # frontier array (an ego hop asks every relation about the same
+        # nodes) are routed once — masks and local rows are relation-free.
+        routes: Dict[int, Tuple] = {}
+        for nodes, relation, num_samples, pad_id in queries:
+            nodes = np.asarray(nodes, dtype=np.int64)
+            seed = int(rng.integers(0, SEED_BOUND))
+            cached = routes.get(id(nodes))
+            if cached is None or cached[0] is not nodes:
+                owners = nodes % P
+                cross = len(nodes) - int((owners == self.client_part).sum())
+                parts = []
+                for p in range(P):
+                    mask = owners == p
+                    if mask.any():
+                        parts.append((p, mask, nodes[mask] // P))
+                routes[id(nodes)] = (nodes, cross, parts)
+            else:
+                _, cross, parts = cached
+            self.stats.add(len(nodes), cross)
+            out = np.empty((len(nodes), num_samples), dtype=np.int64)
+            for p, mask, local_rows in parts:
+                views = self._local_views[p]
+                out[mask] = sample_csr_rows(
+                    views[f"{relation}/indptr"],
+                    views[f"{relation}/indices"],
+                    partition_rng(seed, p),
+                    local_rows,
+                    num_samples,
+                    pad_id,
+                    degs_all=views[f"{relation}/degs"],
+                )
+                subs += 1
+            served += len(nodes)
+            outs.append(out)
+        with self._local_lock:
+            s = self._local_stats
+            s["neighbor_requests"] += served
+            s["sub_requests"] += subs
+            s["batches"] += 1
+            s["busy_ns"] += time.monotonic_ns() - t0
+        return outs
+
     def sample_many(
         self, rng: np.random.Generator, queries: Sequence[Tuple]
     ) -> List[np.ndarray]:
+        if self.local_threshold > 0:
+            total = 0
+            for nodes, _rel, _k, _pad in queries:
+                total += len(nodes)
+            if total <= self.local_threshold:
+                return self._sample_local(rng, queries)
         return self.gather(self.submit(rng, queries))
 
     def sample_neighbors(
@@ -628,20 +737,33 @@ class GraphClient:
     def aggregate_stats(self) -> Dict[str, float]:
         """Cross-partition totals summed over every worker process.
 
-        ``neighbor_requests`` here counts queries as *served by owners*; it
-        must equal the client-side ``stats.neighbor_requests`` mirror (which
-        counts queries as *issued*) — the invariant the service tests pin.
+        ``neighbor_requests`` here counts queries as *served*; it must equal
+        the client-side ``stats.neighbor_requests`` mirror (which counts
+        queries as *issued*) — the invariant the service tests pin. Rounds
+        answered by the hybrid local path (``local_threshold``) are folded
+        in as served-side counts and also broken out under ``local_*`` keys.
         """
         per = self.worker_stats()
+        with self._local_lock:
+            local = dict(self._local_stats)
         agg: Dict[str, float] = {
-            "neighbor_requests": sum(s["neighbor_requests"] for s in per),
-            "sub_requests": sum(s["sub_requests"] for s in per),
-            "batches": sum(s["batches"] for s in per),
-            "busy_s": sum(s["busy_ns"] for s in per) / 1e9,
+            "neighbor_requests": (
+                sum(s["neighbor_requests"] for s in per)
+                + local["neighbor_requests"]
+            ),
+            "sub_requests": sum(s["sub_requests"] for s in per)
+            + local["sub_requests"],
+            "batches": sum(s["batches"] for s in per) + local["batches"],
+            "busy_s": (sum(s["busy_ns"] for s in per) + local["busy_ns"]) / 1e9,
             "num_workers": len(per),
+            "local_neighbor_requests": local["neighbor_requests"],
+            "local_batches": local["batches"],
         }
         return agg
 
     def reset_stats(self) -> None:
         self.stats.reset()
+        with self._local_lock:
+            for key in self._local_stats:
+                self._local_stats[key] = 0
         self._control("reset")

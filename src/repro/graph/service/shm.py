@@ -216,6 +216,16 @@ def attach_shard(
     spurious leak warnings at teardown. The creator alone owns unlink.
     """
     seg = attach_segment(manifest.seg_name)
+    return seg, manifest_views(seg, manifest, writeable)
+
+
+def manifest_views(
+    seg: shared_memory.SharedMemory,
+    manifest: ShardManifest,
+    writeable: bool = False,
+) -> Dict[str, np.ndarray]:
+    """Zero-copy array views over an already-held segment (either the
+    creator's own handle or one returned by :func:`attach_shard`)."""
     views: Dict[str, np.ndarray] = {}
     for key, spec in manifest.arrays.items():
         arr = np.ndarray(
@@ -223,4 +233,4 @@ def attach_shard(
         )
         arr.flags.writeable = writeable
         views[key] = arr
-    return seg, views
+    return views

@@ -51,6 +51,38 @@ def host_floats(xs: Iterable) -> List[float]:
     return [float(v) for v in jax.device_get(list(xs))]
 
 
+class AsyncFloats:
+    """A started (non-blocking) device->host drain, resolved later.
+
+    ``host_floats`` blocks until every value's compute AND copy complete —
+    in the trainer loop that stall serialized the pipeline once per drain
+    window. ``host_floats_async`` instead kicks off the D2H copies
+    (``copy_to_host_async`` where the backend provides it — a no-op hint
+    otherwise) and returns this handle; :meth:`resolve` performs the same
+    explicit ``jax.device_get`` as ``host_floats``, which is near-free by
+    the time a full drain window of steps has been dispatched on top of
+    the copy. Values and ordering are identical to a blocking drain.
+    """
+
+    def __init__(self, xs: Iterable):
+        self._xs = list(xs)
+        for x in self._xs:
+            start = getattr(x, "copy_to_host_async", None)
+            if start is not None:
+                start()
+
+    def __len__(self) -> int:
+        return len(self._xs)
+
+    def resolve(self) -> List[float]:
+        return host_floats(self._xs)
+
+
+def host_floats_async(xs: Iterable) -> AsyncFloats:
+    """Begin a deliberate device->host drain without blocking the loop."""
+    return AsyncFloats(xs)
+
+
 def device_barrier(x):
     """Deliberate pipeline drain point (end of run / before timing)."""
     return jax.block_until_ready(x)

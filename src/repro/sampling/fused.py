@@ -345,20 +345,26 @@ class FusedSampler:
             npos = len(self._positions)
             L = cfg.walk.walk_len
             flat_levels = self._ego_levels(k_se, paths.reshape(-1))
+            # all-dead rounds PAD the shared towers themselves — every
+            # pair indexes into them, so this matches PADding each side
+            flat_levels = [
+                jnp.where(all_dead, PAD, l) for l in flat_levels
+            ]
+            slots = (
+                [self._slot_values(l) for l in flat_levels]
+                if self.value_slots else None
+            )
+            # Shared-tower layout: the GNN embeds each of the W*L unique
+            # (walk, position) towers ONCE; the loss gathers the per-pair
+            # src/dst embeddings by index afterwards. Per-tower encoder
+            # compute is row-independent, so this is numerically identical
+            # to gathering duplicated towers first — but skips embedding
+            # each shared ego up to window-size times.
+            out["shared"] = (flat_levels, slots)
             row = idx // npos
             pcol = idx % npos
-            for name, cols in (("src", self._spos), ("dst", self._dpos)):
-                sel = row * L + cols[pcol]
-                # all-dead rounds emit PAD here too (matching the ids
-                # branch): never pair a real center against a PAD side
-                levels = [
-                    jnp.where(all_dead, PAD, l[sel]) for l in flat_levels
-                ]
-                slots = (
-                    [self._slot_values(l) for l in levels]
-                    if self.value_slots else None
-                )
-                out[name] = (levels, slots)
+            out["src_sel"] = row * L + self._spos[pcol]
+            out["dst_sel"] = row * L + self._dpos[pcol]
         else:
             out["src"] = self._part(k_se, src)
             out["dst"] = self._part(k_de, dst)

@@ -15,6 +15,7 @@ are carried into the next round, never dropped.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Iterator, Optional, Sequence, Tuple
 
@@ -34,6 +35,13 @@ PAD = -1
 # ``batches`` raises after this many consecutive rounds with zero pairs
 # instead of spinning forever on a degenerate walk/pair configuration.
 _MAX_EMPTY_ROUNDS = 100
+
+
+def _phase(timer, name: str):
+    """Attribution scope: a ``PhaseTimer.phase`` when a timer is wired
+    (train.attribution), a no-op context otherwise — zero hot-path cost
+    for untimed runs."""
+    return contextlib.nullcontext() if timer is None else timer.phase(name)
 
 
 def _concat_egos(parts: Sequence[EgoBatch]) -> Optional[EgoBatch]:
@@ -81,6 +89,7 @@ def make_train_sampler(
     bag_slots=(),
     fused_cfg=None,
     bag_counts=None,
+    timer=None,
 ):
     """Sampling-backend factory for the trainer.
 
@@ -92,10 +101,15 @@ def make_train_sampler(
     should gate it with ``fused.fused_eligibility`` first (the trainer
     does, falling back to "host" with a warning). ``seed`` reaches both
     backends: the host pipeline's stream RNG and the fused sampler's
-    build-time padded-adjacency subsample.
+    build-time padded-adjacency subsample. ``timer`` (a
+    ``train.attribution.PhaseTimer``) makes the host pipeline record its
+    sampling cost under the "sample" phase; the trainer's auto backend
+    calibration degrades cheap samplers to the serial path from exactly
+    this measurement (prefetch pays only when a batch costs more to
+    produce than to hand over).
     """
     if backend == "host":
-        return SamplePipeline(engine, config, seed=seed)
+        return SamplePipeline(engine, config, seed=seed, timer=timer)
     if backend == "fused":
         from repro.sampling.fused import FusedConfig, FusedSampler
 
@@ -112,9 +126,12 @@ def make_train_sampler(
 class SamplePipeline:
     """Streams TrainBatches from a graph engine. CPU-side, feeds the device."""
 
-    def __init__(self, engine, config: PipelineConfig, seed: int = 0):
+    def __init__(
+        self, engine, config: PipelineConfig, seed: int = 0, timer=None
+    ):
         self.engine = engine
         self.config = config
+        self.timer = timer  # optional train.attribution.PhaseTimer
         self.walker = MetapathWalker(engine, config.walk)
         self.rng = np.random.default_rng(seed)
         graph = engine.graph if hasattr(engine, "graph") else engine
@@ -178,13 +195,14 @@ class SamplePipeline:
         empty_rounds = 0
         while emitted < num_batches:
             got = 0
-            for src, dst, se, de in self._round():
-                buf_src.append(src)
-                buf_dst.append(dst)
-                if se is not None:
-                    buf_se.append(se)
-                    buf_de.append(de)
-                got += len(src)
+            with _phase(self.timer, "sample"):
+                for src, dst, se, de in self._round():
+                    buf_src.append(src)
+                    buf_dst.append(dst)
+                    if se is not None:
+                        buf_se.append(se)
+                        buf_de.append(de)
+                    got += len(src)
             have += got
             empty_rounds = empty_rounds + 1 if got == 0 else 0
             if empty_rounds >= _MAX_EMPTY_ROUNDS:
@@ -194,10 +212,11 @@ class SamplePipeline:
                 )
             if have < P:
                 continue
-            src = np.concatenate(buf_src) if len(buf_src) > 1 else buf_src[0]
-            dst = np.concatenate(buf_dst) if len(buf_dst) > 1 else buf_dst[0]
-            se = _concat_egos(buf_se)
-            de = _concat_egos(buf_de)
+            with _phase(self.timer, "sample"):
+                src = np.concatenate(buf_src) if len(buf_src) > 1 else buf_src[0]
+                dst = np.concatenate(buf_dst) if len(buf_dst) > 1 else buf_dst[0]
+                se = _concat_egos(buf_se)
+                de = _concat_egos(buf_de)
             n_full = have // P
             for bi in range(n_full):
                 sl = slice(bi * P, (bi + 1) * P)
@@ -229,14 +248,15 @@ class SamplePipeline:
         neg_ids = None
         neg_ego = None
         if cfg.pair.neg_mode == "random":
-            neg_ids = sample_random_negatives(
-                self.rng, len(src), cfg.pair.num_negatives, self._node_range
-            )
-            if cfg.ego is not None:
-                neg_ego = sample_ego_batch(
-                    self.rng, self.engine, neg_ids.reshape(-1), cfg.ego
+            with _phase(self.timer, "sample"):
+                neg_ids = sample_random_negatives(
+                    self.rng, len(src), cfg.pair.num_negatives, self._node_range
                 )
-                self.ego_sampling_ops += neg_ids.size
+                if cfg.ego is not None:
+                    neg_ego = sample_ego_batch(
+                        self.rng, self.engine, neg_ids.reshape(-1), cfg.ego
+                    )
+                    self.ego_sampling_ops += neg_ids.size
         return TrainBatch(
             src_ids=src, dst_ids=dst, neg_ids=neg_ids,
             src_ego=src_ego, dst_ego=dst_ego, neg_ego=neg_ego,

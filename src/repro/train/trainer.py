@@ -5,16 +5,30 @@ pair -> GNN -> loss) with the sparse/dense optimizer split and the recall
 evaluation. It is the engine behind examples/train_recsys.py and every
 RQ benchmark.
 
-Throughput design: host-side sampling + device-batch conversion run in a
-bounded background prefetch thread (``prefetch_batches`` deep), overlapping
-with the jitted grad step — or, with ``sampling_backend="fused"`` on an
-eligible graph, sampling moves onto the device entirely: walk, window-pair
-and ego gather run inside the jitted grad step (sampling/fused.py) and the
-prefetcher becomes a no-op pass-through. The loop never forces a device
-sync per step
-(losses stay on device until the end, drained in windows so long runs don't
-pin unbounded device buffers; set ``sync_every_step=True`` for the strictly
-serial sample->sync->step loop, e.g. as a benchmark baseline).
+Throughput design: host-side sampling + host-batch assembly run in a
+bounded background prefetch thread (``prefetch_batches`` deep), the one
+explicit H2D transfer per batch happens in a consumer-side double-buffered
+stager (``jax.device_put`` of batch k+1 overlaps the in-flight step k, and
+the next device batch is always resident before its dispatch) — or, with
+``sampling_backend="fused"`` on an eligible graph, sampling moves onto the
+device entirely: walk, window-pair and ego gather run inside the jitted
+grad step (sampling/fused.py) and the prefetcher/stager are bypassed. The
+loop never forces a device sync per step: losses stay on device and are
+drained in windows through a *started-ahead* async readback
+(``host_floats_async``), so the fetch of window k resolves while window
+k+1's steps dispatch; set ``sync_every_step=True`` for the strictly serial
+sample->sync->step loop, e.g. as a benchmark baseline.
+
+Backend selection is measured, not guessed (``auto_backend``, default on):
+at the first ``train()`` a short calibration phase times per-batch host
+sampling/assembly, the jitted step, the prefetch handoff, and (when
+``sampling_backend="auto"``) the fused step, then picks
+serial-vs-prefetch-vs-fused from those numbers. Explicit settings always
+win; the decision and its measurements are recorded in
+``TrainResult.plan``. ``TrainerConfig.attribution`` threads a sync-free
+``train.attribution.PhaseTimer`` through the loop (sample / assemble /
+batch_wait / h2d / dispatch / loss_fetch) — `make bench-attr` records the
+per-combination breakdown into BENCH_throughput.json.
 
 Sparse updates (``sparse_updates=True``, the default — the paper's PS
 pull/push, §3.6): the prefetch thread deduplicates each batch's touched ids
@@ -30,9 +44,11 @@ equivalent).
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
 import time
+import warnings
 from typing import Callable, Dict, Iterator, List, Optional, Tuple
 
 import jax
@@ -46,8 +62,15 @@ from repro.graph.generator import RecsysDataset
 from repro.lint.sanitizer import (
     device_barrier,
     host_floats,
+    host_floats_async,
     host_scalar,
     transfer_sanitizer,
+)
+from repro.train.attribution import (
+    PhaseTimer,
+    measure_handoff_overhead,
+    median,
+    phase_scope,
 )
 from repro.sampling.fused import FusedConfig, fused_eligibility
 from repro.sampling.pipeline import (
@@ -57,6 +80,14 @@ from repro.train import optimizer as opt_lib
 from repro.utils import get_logger
 
 log = get_logger("repro.train")
+
+# The sparse step donates its batch so the stager's H2D buffers recycle into
+# the update outputs. A batch's int32 id arrays can never alias the float
+# outputs, so XLA reports them "not usable" on every (re)compile — expected,
+# not actionable; the float buffers (bag-mode count matrices) do alias.
+warnings.filterwarnings(
+    "ignore", message=r"Some donated buffers were not usable.*int32.*"
+)
 
 
 @dataclasses.dataclass
@@ -82,8 +113,23 @@ class TrainerConfig:
     log_every: int = 50
     seed: int = 0
     # Depth of the background host->device prefetch queue. 0 disables the
-    # prefetch thread and runs the serial sample->step loop.
-    prefetch_batches: int = 2
+    # prefetch thread and runs the serial sample->step loop; an explicit
+    # int always wins. None defers the serial-vs-prefetch decision to the
+    # auto-backend calibration (or the legacy default of 2 when
+    # ``auto_backend`` is off / the run is too short to calibrate).
+    prefetch_batches: Optional[int] = None
+    # Measured backend selection: at the first train() a short calibration
+    # phase times per-batch host cost, the jitted step and the prefetch
+    # handoff, then resolves every knob left at its "auto" default
+    # (prefetch_batches=None, sampling_backend="auto"). Explicit settings
+    # are never overridden. Calibration is skipped (legacy defaults apply)
+    # when num_steps < calibrate_min_steps — short smoke runs shouldn't
+    # pay a measurement phase longer than the run itself.
+    auto_backend: bool = True
+    # Batches sampled / steps timed during calibration (first one warms
+    # caches / compiles and is excluded from the medians).
+    calibrate_batches: int = 3
+    calibrate_min_steps: int = 32
     # Force a device sync (float(loss)) after every step — the seed's serial
     # behavior; benchmarks use it as the baseline arm.
     sync_every_step: bool = False
@@ -93,6 +139,13 @@ class TrainerConfig:
     # Gather→step→scatter training (O(unique ids) per step). False falls back
     # to dense full-table grads + row-wise AdaGrad over every row (O(N)).
     sparse_updates: bool = True
+    # Sparse/dense crossover: below this node-table row count the sparse
+    # path's dedup+gather+scatter overhead exceeds what it saves
+    # (BENCH_throughput.json grad_step: 0.45x dense at 10k rows, 1.66x at
+    # 100k), so ``sparse_updates=True`` routes through the dense step for
+    # small tables. Both paths are bitwise-equivalent (PR-2 suite); set 0
+    # to force the sparse path regardless of size.
+    sparse_min_rows: int = 32768
     # Initial unique-id bucket width per table (0 = start at 8). Buckets grow
     # to the next power of two on overflow (one jit recompile per width).
     unique_bucket: int = 0
@@ -111,11 +164,22 @@ class TrainerConfig:
     # core. Both backends are bitwise-identical under a fixed seed.
     engine_backend: str = "inproc"  # inproc | mp
     # Worker processes for the "mp" backend (clamped to num_partitions).
-    num_engine_workers: int = 2
+    # 0 sizes the fleet automatically: half the visible cores (leaving the
+    # rest for the trainer process and XLA's own thread pool), capped by
+    # the partition count.
+    num_engine_workers: int = 0
     # Partition count when the "mp" trainer is handed a bare HeteroGraph
     # (the memory-frugal setup: no in-process partition copies are ever
     # built). Ignored when an engine is passed — its partitioning wins.
     num_engine_partitions: int = 4
+    # Hybrid serving threshold for the "mp" backend: a sampling round whose
+    # total node count is at or below this is answered in-process by the
+    # GraphClient over zero-copy views of its own shard segments (bitwise
+    # identical to a worker reply — same core, same seeding). Small rounds
+    # are latency-bound, so skipping the pipe round-trip wins whenever
+    # workers contend with the trainer for cores; big rounds still go to
+    # the fleet. 0 disables (every round crosses the process boundary).
+    engine_local_threshold: int = 8192
     # Sampling front end. "host" streams batches from the NumPy pipeline
     # (walker + ego sampler against the graph engine, prefetch thread,
     # sparse dedup); "fused" runs walk->pair->ego as ONE jitted device
@@ -125,7 +189,10 @@ class TrainerConfig:
     # warning). Fused mode bypasses the prefetcher (nothing to prefetch)
     # and always applies the dense-table update — numerically identical
     # to the sparse path's row-wise AdaGrad (tests/test_sparse_updates).
-    sampling_backend: str = "host"  # host | fused
+    # "auto" lets the calibration phase choose: fused when the measured
+    # fused step beats the best host-pipeline estimate (and the graph
+    # passes the memory gate), host otherwise.
+    sampling_backend: str = "host"  # host | fused | auto
     # Padded-adjacency width for the fused sampler's device tables.
     fused_max_degree: int = 32
     # Device-table budget (MiB) for the fused eligibility check.
@@ -140,6 +207,11 @@ class TrainerConfig:
     # jax.device_put/device_get stay legal; the guard is thread-local, so
     # the prefetch producer is covered by lint rule H002 instead.
     sanitize_transfers: bool = True
+    # Record a per-phase time breakdown (sample/assemble/batch_wait/h2d/
+    # dispatch/loss_fetch) into TrainResult.attribution via the sync-free
+    # ring-buffer PhaseTimer (train/attribution.py). Off by default: zero
+    # hot-loop cost beyond a None check.
+    attribution: bool = False
 
 
 @dataclasses.dataclass
@@ -149,6 +221,11 @@ class TrainResult:
     eval_history: List[Dict[str, float]]  # appended at each eval point
     wall_time_s: float
     pairs_seen: int
+    # Resolved execution plan (sampling backend, prefetch depth, and — when
+    # calibrated — the per-phase measurements the choice was made from).
+    plan: Optional[Dict] = None
+    # PhaseTimer summary when TrainerConfig.attribution is on.
+    attribution: Optional[Dict] = None
 
 
 _DONE = object()
@@ -258,6 +335,66 @@ class _Prefetcher:
             )
 
 
+def _round_spikes(durs: List[float]) -> List[int]:
+    """Indices of round-paying batches in a per-batch duration series.
+
+    Carry batches drain the round buffer in microseconds; a batch 4x over
+    the median paid a sampling round. When every batch pays a round the
+    median IS the round cost, nothing clears the threshold, and the caller
+    falls back to the plain mean (which is then exact anyway).
+    """
+    if len(durs) < 2:
+        return []
+    thr = 4.0 * median(durs)
+    return [i for i, d in enumerate(durs) if d > thr]
+
+
+def _staged_batches(
+    it: Iterator, timer: Optional[PhaseTimer] = None, double_buffer: bool = True
+) -> Iterator:
+    """Consumer-side H2D stager: the one explicit ``jax.device_put`` per
+    batch, double-buffered.
+
+    With ``double_buffer`` on (any prefetching run), batch k+1's host->device
+    transfer is issued BEFORE batch k is yielded to the step loop, so the
+    transfer overlaps the in-flight grad step k and the next device batch is
+    always resident by the time its dispatch needs it — two device batches
+    rotate, never more. The serial path (``double_buffer=False``) stages
+    batches one at a time: pulling batch k+1 early there would just move
+    inline sampling around, not overlap anything.
+
+    Phases: "batch_wait" is time blocked on the upstream iterator (queue
+    starvation under prefetch, inline sampling+assembly when serial);
+    "h2d" is the device_put itself. Producer errors propagate unchanged.
+    """
+    it = iter(it)
+    if not double_buffer:
+        while True:
+            with phase_scope(timer, "batch_wait"):
+                item = next(it, _DONE)
+            if item is _DONE:
+                return
+            with phase_scope(timer, "h2d"):
+                staged = (jax.device_put(item[0]), item[1])
+            yield staged
+    with phase_scope(timer, "batch_wait"):
+        item = next(it, _DONE)
+    if item is _DONE:
+        return
+    with phase_scope(timer, "h2d"):
+        pending = (jax.device_put(item[0]), item[1])
+    while True:
+        with phase_scope(timer, "batch_wait"):
+            item = next(it, _DONE)
+        if item is _DONE:
+            yield pending
+            return
+        with phase_scope(timer, "h2d"):
+            staged = (jax.device_put(item[0]), item[1])
+        yield pending
+        pending = staged
+
+
 class Graph4RecTrainer:
     def __init__(
         self,
@@ -275,16 +412,29 @@ class Graph4RecTrainer:
         # then partitions straight into shared memory,
         # cfg.num_engine_partitions ways).
         self._owned_client = None
+        # Auto worker sizing (num_engine_workers=0): half the visible cores —
+        # the other half stays with the trainer process and XLA's own thread
+        # pool. The client additionally clamps to its partition count.
+        self._engine_workers = (
+            cfg.num_engine_workers
+            if cfg.num_engine_workers > 0
+            else max(1, (os.cpu_count() or 2) // 2)
+        )
         if cfg.engine_backend == "mp":
             from repro.graph.service import GraphClient
 
             if hasattr(engine, "graph"):  # a built engine: inherit its layout
-                engine = GraphClient(engine, num_workers=cfg.num_engine_workers)
+                engine = GraphClient(
+                    engine,
+                    num_workers=self._engine_workers,
+                    local_threshold=cfg.engine_local_threshold,
+                )
             else:
                 engine = GraphClient(
                     engine,
                     num_partitions=cfg.num_engine_partitions,
-                    num_workers=cfg.num_engine_workers,
+                    num_workers=self._engine_workers,
+                    local_threshold=cfg.engine_local_threshold,
                 )
             self._owned_client = engine
         elif cfg.engine_backend != "inproc":
@@ -317,6 +467,20 @@ class Graph4RecTrainer:
             self._buckets["node"] = cfg.unique_bucket
             for slot in model_cfg.embedding.slots:
                 self._buckets[f"slot:{slot.name}"] = cfg.unique_bucket
+        # Sparse/dense crossover (satellite of the throughput PR): on tables
+        # below ``sparse_min_rows`` the sparse path's dedup+gather+scatter
+        # overhead exceeds what it saves, so sparse_updates routes through
+        # the dense step there. Bitwise-equivalent either way (PR-2 suite).
+        num_nodes = dataset.graph.num_nodes
+        self._sparse_on = cfg.sparse_updates and (
+            cfg.sparse_min_rows <= 0 or num_nodes >= cfg.sparse_min_rows
+        )
+        if cfg.sparse_updates and not self._sparse_on:
+            log.info(
+                "sparse_updates requested but num_nodes=%d < sparse_min_rows="
+                "%d; using the (equivalent, faster-at-this-size) dense step",
+                num_nodes, cfg.sparse_min_rows,
+            )
         # 'bag' side info: one count matrix per slot, built once and shared
         # by every batch (see embedding/table.py:embed_nodes_bag). The sparse
         # path instead ships a per-batch sub count matrix and never builds
@@ -325,54 +489,72 @@ class Graph4RecTrainer:
             model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
             if (
                 model_lib.bag_slot_specs(self.model_cfg)
-                and not cfg.sparse_updates
+                and not self._sparse_on
             )
             else None
         )
-        # Fused device sampling: build the sampler (and the combined
-        # sample+grad step) only when the graph passes the memory gate.
+        # Fused device sampling: built eagerly for an explicit
+        # sampling_backend="fused" (memory-gate fallback to host with a
+        # warning), lazily by the calibration phase for "auto".
         self._fused_sampler = None
         self._fused_step = None
+        self._plan: Optional[Dict] = None
         if cfg.sampling_backend == "fused":
-            fused_cfg = FusedConfig(
-                max_degree=cfg.fused_max_degree,
-                budget_mb=cfg.fused_budget_mb,
-                oversample=cfg.fused_oversample,
-                use_kernel_pairs=cfg.fused_use_kernel_pairs,
-            )
-            bspecs = model_lib.bag_slot_specs(self.model_cfg)
-            vspecs = model_lib.value_slot_specs(self.model_cfg)
-            ok, why = fused_eligibility(
-                dataset.graph, pipe_cfg, vspecs, bspecs, fused_cfg
-            )
+            ok, why = self._build_fused()
             if ok:
-                self._fused_sampler = make_train_sampler(
-                    dataset.graph, pipe_cfg, backend="fused", seed=cfg.seed,
-                    value_slots=vspecs, bag_slots=bspecs, fused_cfg=fused_cfg,
-                    bag_counts=(
-                        model_lib.slot_count_arrays(dataset.graph, self.model_cfg)
-                        if bspecs else None
-                    ),
-                )
-                self._fused_step = jax.jit(
-                    self._make_fused_step(), donate_argnums=(0, 1)
-                )
                 log.info("fused sampling backend active (%s)", why)
             else:
                 log.warning(
                     "sampling_backend='fused' ineligible: %s; falling back "
                     "to the host pipeline", why,
                 )
-        elif cfg.sampling_backend != "host":
+        elif cfg.sampling_backend not in ("host", "auto"):
             raise ValueError(f"unknown sampling_backend {cfg.sampling_backend!r}")
         self._grad_step = jax.jit(self._make_grad_step())
+        # The sparse step additionally donates its (single-use, per-step)
+        # device batch — the stager's H2D buffers are recycled into the
+        # update outputs. The dense step must NOT donate batches: dense
+        # bag-mode batches alias the shared slot_count_arrays cache.
         self._sparse_step = jax.jit(
-            self._make_sparse_step(), donate_argnums=(0, 1)
+            self._make_sparse_step(), donate_argnums=(0, 1, 2)
         )
         self._train_pairs = np.concatenate(
             [np.stack([u, i], 1) for (u, i) in dataset.train_edges.values()],
             axis=0,
         )
+
+    def _build_fused(self) -> Tuple[bool, str]:
+        """Build the fused sampler + combined sample/grad step if the graph
+        passes the memory gate. Idempotent; returns (built, reason)."""
+        if self._fused_sampler is not None:
+            return True, "already built"
+        cfg = self.cfg
+        fused_cfg = FusedConfig(
+            max_degree=cfg.fused_max_degree,
+            budget_mb=cfg.fused_budget_mb,
+            oversample=cfg.fused_oversample,
+            use_kernel_pairs=cfg.fused_use_kernel_pairs,
+        )
+        bspecs = model_lib.bag_slot_specs(self.model_cfg)
+        vspecs = model_lib.value_slot_specs(self.model_cfg)
+        ok, why = fused_eligibility(
+            self.dataset.graph, self.pipe_cfg, vspecs, bspecs, fused_cfg
+        )
+        if not ok:
+            return False, why
+        self._fused_sampler = make_train_sampler(
+            self.dataset.graph, self.pipe_cfg, backend="fused",
+            seed=cfg.seed, value_slots=vspecs, bag_slots=bspecs,
+            fused_cfg=fused_cfg,
+            bag_counts=(
+                model_lib.slot_count_arrays(self.dataset.graph, self.model_cfg)
+                if bspecs else None
+            ),
+        )
+        self._fused_step = jax.jit(
+            self._make_fused_step(), donate_argnums=(0, 1)
+        )
+        return True, why
 
     def _make_grad_step(self):
         mc = self.model_cfg
@@ -495,56 +677,250 @@ class Graph4RecTrainer:
             max_users=self.cfg.eval_max_users, method=self.cfg.eval_method,
         )
 
-    def _device_batches(
-        self, pipeline: SamplePipeline, num: int
+    def _host_batches(
+        self, pipeline: SamplePipeline, num: int, timer=None
     ) -> Iterator[Tuple[Dict, int]]:
-        """Host pipeline -> (device batch, num pairs); runs inside the
-        prefetch thread so jnp conversion — and, on the sparse path, the
-        unique-id dedup + remap — overlaps device compute."""
+        """Host pipeline -> (HOST numpy batch pytree, num pairs); runs
+        inside the prefetch thread so assembly — and, on the sparse path,
+        the unique-id dedup + remap — overlaps device compute. The one H2D
+        transfer per batch happens later, in the consumer-side
+        ``_staged_batches`` stager, never hidden in this thread."""
         for batch in pipeline.batches(num):
-            if self.cfg.sparse_updates:
-                dev = model_lib.sparse_device_batch(
-                    self.dataset.graph, batch, self.model_cfg,
-                    buckets=self._buckets,
-                )
-            else:
-                dev = model_lib.device_batch(
-                    self.dataset.graph, batch, self.model_cfg,
-                    slot_counts=self._slot_counts,
-                )
-            yield dev, len(batch.src_ids)
+            with phase_scope(timer, "assemble"):
+                if self._sparse_on:
+                    host = model_lib.sparse_host_batch(
+                        self.dataset.graph, batch, self.model_cfg,
+                        buckets=self._buckets,
+                    )
+                else:
+                    host = model_lib.host_batch(
+                        self.dataset.graph, batch, self.model_cfg,
+                        slot_counts=self._slot_counts,
+                    )
+            yield host, len(batch.src_ids)
 
     def _fused_batch_iter(self) -> Iterator[Tuple[jax.Array, int]]:
-        """Fused mode's stand-in for the host batch stream: the "batch" fed
-        to the jitted step is just the per-step PRNG key (sampling happens
-        inside the step), so the prefetcher has nothing to do and is
-        bypassed entirely — a no-op pass-through."""
-        # one batched split up front: per-step eager fold_in dispatches
-        # would cost more than the fused sample itself
-        keys = jax.random.split(
-            jax.random.PRNGKey(self.cfg.seed), max(self.cfg.num_steps, 1)
+        """Fused mode's stand-in for the batch stream: the "batch" fed to
+        the jitted step is just the per-step PRNG key (sampling happens
+        inside the step), so the prefetcher/stager have nothing to do and
+        are bypassed entirely."""
+        # One batched split, materialized eagerly (before the timed loop
+        # starts): per-step fold_in dispatches would cost more than the
+        # fused sample itself, and a lazy split would bill the first step.
+        keys = list(
+            jax.random.split(
+                jax.random.PRNGKey(self.cfg.seed), max(self.cfg.num_steps, 1)
+            )
         )
-        for i in range(self.cfg.num_steps):
-            yield keys[i], self.pipe_cfg.batch_pairs
+        npairs = self.pipe_cfg.batch_pairs
+        return iter([(k, npairs) for k in keys[: self.cfg.num_steps]])
+
+    # ------------------------------------------------------ backend planning
+    def _copy_params(self, params: Dict) -> Dict:
+        """Fresh device copies of a param pytree (donation-safe). device_put
+        is the explicit H2D spelling (no-op on already-device leaves)."""
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x).copy(), params
+        )
+
+    def _calibrate(self, params: Dict) -> Dict:
+        """Measure per-batch host cost, the jitted step, the prefetch
+        handoff, and (sampling_backend="auto") the fused step.
+
+        Every measurement runs on throwaway state: a SEPARATE same-seed
+        pipeline instance (the training pipeline's stream is untouched, so
+        a calibrated run is bitwise-identical to an explicitly-configured
+        one) and fresh param/opt-state copies per step rep (the sparse and
+        fused steps donate their inputs). The first rep of each series pays
+        compile/warmup and is excluded from the medians.
+        """
+        cfg = self.cfg
+        n = max(2, cfg.calibrate_batches)
+        pipeline = make_train_sampler(
+            self.engine, self.pipe_cfg, backend="host", seed=cfg.seed
+        )
+        # The host pipeline produces batches in ROUNDS: one walk+ego round
+        # fills a carry buffer that the next several batches drain in
+        # microseconds. Timing individual batches therefore bimodally mixes
+        # round-paying spikes with near-free carries — the meaningful number
+        # is the amortized cost over whole rounds. Pull batches until two
+        # round spikes are visible and average the window between them;
+        # when no second spike appears inside the budget (huge rounds, or
+        # every batch pays a round so there are no spikes), fall back to
+        # the plain mean, which then over- (never under-) estimates the
+        # host cost and so can only bias toward prefetching — the safe
+        # direction for an expensive sampler.
+        cap, budget_s = 64, 0.5
+        host_it = self._host_batches(pipeline, cap)
+        durs: List[float] = []
+        host_batches: List[Dict] = []
+        elapsed = 0.0
+        for i in range(cap):
+            t0 = time.perf_counter()
+            try:
+                host, _np_ = next(host_it)
+            except StopIteration:
+                break
+            d = time.perf_counter() - t0
+            durs.append(d)
+            elapsed += d
+            if len(host_batches) < n:
+                host_batches.append(host)
+            if i + 1 < n:
+                continue
+            spikes = _round_spikes(durs)
+            if len(spikes) >= 2 or elapsed >= budget_s:
+                break
+        spikes = _round_spikes(durs)
+        if len(spikes) >= 2:
+            host_s = sum(durs[spikes[0]:spikes[-1]]) / (spikes[-1] - spikes[0])
+        else:
+            host_s = elapsed / max(1, len(durs))
+        meas: Dict = {"host_batch_s": host_s}
+        step_times: List[float] = []
+        for i in range(n):
+            p = self._copy_params(params)
+            if self._sparse_on:
+                st = self._init_sparse_opt_state(p)
+                fn = self._sparse_step
+            else:
+                st = self.opt.init(p)
+                fn = self._grad_step
+            dev = jax.device_put(host_batches[i % len(host_batches)])
+            t0 = time.perf_counter()
+            out = fn(p, st, dev)
+            device_barrier(out[2])
+            step_times.append(time.perf_counter() - t0)
+        meas["step_s"] = median(step_times[1:])
+        meas["handoff_s"] = measure_handoff_overhead()
+        if cfg.sampling_backend == "auto":
+            ok, why = self._build_fused()
+            if ok:
+                keys = jax.random.split(jax.random.PRNGKey(cfg.seed), n)
+                fused_times: List[float] = []
+                for i in range(n):
+                    p = self._copy_params(params)
+                    st = self.opt.init(p)
+                    t0 = time.perf_counter()
+                    out = self._fused_step(p, st, keys[i])
+                    device_barrier(out[2])
+                    fused_times.append(time.perf_counter() - t0)
+                meas["fused_step_s"] = median(fused_times[1:])
+            else:
+                meas["fused_ineligible"] = why
+        return meas
+
+    def _resolve_plan(self, params: Dict) -> Dict:
+        """Resolve the run's execution plan: sampling backend + prefetch
+        depth. Explicit settings always win; knobs left at their "auto"
+        defaults are decided from the calibration measurements (or legacy
+        defaults when calibration is off / the run is too short). Cached —
+        repeated train() calls on one trainer calibrate once."""
+        if self._plan is not None:
+            return self._plan
+        cfg = self.cfg
+        auto_prefetch = cfg.prefetch_batches is None
+        auto_sampling = cfg.sampling_backend == "auto"
+        plan: Dict = {
+            "engine_backend": cfg.engine_backend,
+            "engine_workers": (
+                self._engine_workers if cfg.engine_backend == "mp" else None
+            ),
+            "calibrated": False,
+        }
+        calibrate = (
+            cfg.auto_backend
+            and (auto_prefetch or auto_sampling)
+            and cfg.num_steps >= cfg.calibrate_min_steps
+        )
+        if not calibrate:
+            plan["sampling"] = (
+                "fused" if self._fused_sampler is not None
+                and cfg.sampling_backend == "fused" else "host"
+            )
+            plan["prefetch"] = (
+                0 if plan["sampling"] == "fused"
+                else (2 if auto_prefetch else cfg.prefetch_batches)
+            )
+            plan["reason"] = (
+                "explicit settings" if not (auto_prefetch or auto_sampling)
+                else (
+                    "auto_backend off" if not cfg.auto_backend
+                    else f"run too short to calibrate "
+                         f"(num_steps={cfg.num_steps} < "
+                         f"{cfg.calibrate_min_steps}); legacy defaults"
+                )
+            )
+            self._plan = plan
+            return plan
+        meas = self._calibrate(params)
+        plan["calibrated"] = True
+        plan["measurements"] = {k: round(v, 6) if isinstance(v, float) else v
+                                for k, v in meas.items()}
+        host_s, step_s = meas["host_batch_s"], meas["step_s"]
+        handoff_s = meas["handoff_s"]
+        # Prefetch pays only when BOTH sides have enough work to hide the
+        # queue handoff: the pipelined step time is bounded below by the
+        # slower side plus the handoff, and what the overlap can save is at
+        # most the cheaper side. Require a clear (>10%) predicted win —
+        # the probe can't see GIL contention between the producer's NumPy
+        # work and the consumer's dispatches, which is exactly what made
+        # prefetching a cheap walk-based sampler a 0.85x regression.
+        serial_est = host_s + step_s
+        prefetch_est = max(host_s, step_s) + handoff_s
+        want_prefetch = serial_est > 1.1 * prefetch_est
+        sampling = cfg.sampling_backend if not auto_sampling else "host"
+        if auto_sampling and "fused_step_s" in meas:
+            if meas["fused_step_s"] < min(serial_est, prefetch_est):
+                sampling = "fused"
+        if sampling == "fused" and self._fused_sampler is None:
+            sampling = "host"  # explicit "fused" that failed the memory gate
+        plan["sampling"] = sampling
+        if sampling == "fused":
+            plan["prefetch"] = 0
+            plan["reason"] = (
+                f"fused step {meas.get('fused_step_s', 0) * 1e3:.2f}ms < host "
+                f"pipeline est {min(serial_est, prefetch_est) * 1e3:.2f}ms"
+            )
+        elif not auto_prefetch:
+            plan["prefetch"] = cfg.prefetch_batches
+            plan["reason"] = "explicit prefetch_batches"
+        elif want_prefetch:
+            plan["prefetch"] = 2
+            plan["reason"] = (
+                f"prefetch: serial est {serial_est * 1e3:.2f}ms > 1.1x "
+                f"pipelined est {prefetch_est * 1e3:.2f}ms (host "
+                f"{host_s * 1e3:.2f}ms, step {step_s * 1e3:.2f}ms, handoff "
+                f"{handoff_s * 1e6:.0f}us)"
+            )
+        else:
+            plan["prefetch"] = 0
+            plan["reason"] = (
+                f"serial: pipelining would save <10% (serial est "
+                f"{serial_est * 1e3:.2f}ms vs pipelined est "
+                f"{prefetch_est * 1e3:.2f}ms) — the queue handoff would "
+                "cost more than the overlap hides"
+            )
+        log.info("backend plan: %s", plan["reason"])
+        self._plan = plan
+        return plan
 
     def train(self, params: Optional[Dict] = None) -> TrainResult:
         cfg = self.cfg
         params = params if params is not None else self.init_params()
-        if self._fused_sampler is not None:
+        plan = self._resolve_plan(params)
+        timer = PhaseTimer() if cfg.attribution else None
+        use_fused = plan["sampling"] == "fused"
+        if use_fused:
             # The fused step donates its param buffers; copy like the
-            # sparse path so a caller-held pytree survives. device_put is
-            # the explicit H2D spelling (no-op on already-device leaves).
-            params = jax.tree_util.tree_map(
-                lambda x: jax.device_put(x).copy(), params
-            )
+            # sparse path so a caller-held pytree survives.
+            params = self._copy_params(params)
             opt_state = self.opt.init(params)
             step_fn = self._fused_step
-        elif cfg.sparse_updates:
+        elif self._sparse_on:
             # The sparse step donates its param buffers; copy once so a
             # caller-held pytree (e.g. for a later cold-start eval) survives.
-            params = jax.tree_util.tree_map(
-                lambda x: jax.device_put(x).copy(), params
-            )
+            params = self._copy_params(params)
             opt_state = self._init_sparse_opt_state(params)
             step_fn = self._sparse_step
         else:
@@ -552,41 +928,64 @@ class Graph4RecTrainer:
             step_fn = self._grad_step
         loss_hist: List[jax.Array] = []  # in-flight on-device tail
         losses: List[float] = []  # drained, completed losses
+        pending_drains: List = []  # started async readbacks, FIFO
+        depth = plan["prefetch"]
         # Keep at least the prefetch window on device before draining; the
-        # drained prefix is steps behind the last dispatch, so device_get
-        # barely blocks.
-        drain_tail = max(1, cfg.prefetch_batches + 1)
+        # drained prefix is steps behind the last dispatch, so the readback
+        # barely blocks — and it is started async and resolved a full
+        # window later anyway.
+        drain_tail = max(1, depth + 1)
         evals: List[Dict[str, float]] = []
         pairs_seen = 0
+        steps_done = 0
         prefetcher: Optional[_Prefetcher] = None
-        if self._fused_sampler is not None:
+        if use_fused:
             batch_iter: Iterator = self._fused_batch_iter()
         else:
             pipeline = make_train_sampler(
-                self.engine, self.pipe_cfg, backend="host", seed=cfg.seed
+                self.engine, self.pipe_cfg, backend="host", seed=cfg.seed,
+                timer=timer,
             )
-            batch_iter = self._device_batches(pipeline, cfg.num_steps)
-            if cfg.prefetch_batches > 0:
-                prefetcher = _Prefetcher(batch_iter, cfg.prefetch_batches)
-                batch_iter = prefetcher
+            host_iter: Iterator = self._host_batches(
+                pipeline, cfg.num_steps, timer
+            )
+            if depth > 0:
+                prefetcher = _Prefetcher(host_iter, depth)
+                host_iter = prefetcher
+            batch_iter = _staged_batches(
+                host_iter, timer, double_buffer=depth > 0
+            )
         t0 = time.perf_counter()
         try:
             for step, (dev, npairs) in enumerate(batch_iter):
                 # Every dispatch runs under the transfer guard: batches were
-                # converted in the producer (device_batch) or ARE device
-                # values (fused keys), so any transfer here is a regression.
-                with transfer_sanitizer(cfg.sanitize_transfers):
-                    params, opt_state, loss = step_fn(params, opt_state, dev)
+                # staged by an explicit device_put (or ARE device values —
+                # fused keys), so any transfer here is a regression.
+                with phase_scope(timer, "dispatch"):
+                    with transfer_sanitizer(cfg.sanitize_transfers):
+                        params, opt_state, loss = step_fn(
+                            params, opt_state, dev
+                        )
                 loss_hist.append(loss)
                 pairs_seen += npairs
+                steps_done += 1
                 if cfg.sync_every_step:
-                    host_scalar(loss)
+                    with phase_scope(timer, "loss_fetch"):
+                        host_scalar(loss)
                 if (
                     cfg.loss_fetch_every
                     and len(loss_hist) >= cfg.loss_fetch_every + drain_tail
                 ):
-                    done, loss_hist = loss_hist[:-drain_tail], loss_hist[-drain_tail:]
-                    losses.extend(host_floats(done))
+                    done, loss_hist = (
+                        loss_hist[:-drain_tail], loss_hist[-drain_tail:]
+                    )
+                    with phase_scope(timer, "loss_fetch"):
+                        # Resolve the PREVIOUS window (its copies have had a
+                        # full window of dispatches to complete — near-free)
+                        # and start this window's readback without blocking.
+                        if pending_drains:
+                            losses.extend(pending_drains.pop(0).resolve())
+                        pending_drains.append(host_floats_async(done))
                 if cfg.log_every and (step + 1) % cfg.log_every == 0:
                     log.info("step %d loss %.4f", step + 1, host_scalar(loss))
                 if cfg.eval_every and (step + 1) % cfg.eval_every == 0:
@@ -603,10 +1002,18 @@ class Graph4RecTrainer:
         if loss_hist:
             device_barrier(loss_hist[-1])
         wall = time.perf_counter() - t0
+        # Everything is complete past the barrier: resolving the started
+        # readbacks (FIFO — loss order is the dispatch order) and the tail
+        # costs only the copies.
+        for drain in pending_drains:
+            losses.extend(drain.resolve())
         losses.extend(host_floats(loss_hist))
         if cfg.eval_at_end:
             evals.append(self.evaluate(params))
         return TrainResult(
             params=params, losses=losses, eval_history=evals,
-            wall_time_s=wall, pairs_seen=pairs_seen,
+            wall_time_s=wall, pairs_seen=pairs_seen, plan=dict(plan),
+            attribution=(
+                timer.summary(wall, steps_done) if timer is not None else None
+            ),
         )

@@ -1,0 +1,289 @@
+"""Per-step time attribution + adaptive backend selection tests.
+
+Covers the PhaseTimer (ring-buffer accounting, summary math), the
+calibrated execution plan (explicit settings win; cheap samplers degrade
+to serial; auto runs are bitwise-identical to explicitly-configured ones),
+and the committed BENCH_throughput.json regression pins — the three
+end-to-end ratios this PR flips stay pinned by the committed numbers, not
+by re-timing on (noisy) CI machines.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Graph4RecConfig, HeteroGNNConfig
+from repro.embedding import EmbeddingConfig
+from repro.graph import DistributedGraphEngine, TOY, generate
+from repro.sampling import EgoConfig, PairConfig, PipelineConfig
+from repro.train import Graph4RecTrainer, TrainerConfig
+from repro.train.attribution import (
+    PHASES,
+    PhaseTimer,
+    measure_handoff_overhead,
+    median,
+    phase_scope,
+)
+from repro.walk import WalkConfig
+
+pytestmark = pytest.mark.quick
+
+RELS = ("u2click2i", "i2click2u")
+
+_JSON_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_throughput.json"
+)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(TOY, seed=0)
+
+
+def make_trainer(ds, gnn=True, steps=6, **cfg_kw):
+    mc = Graph4RecConfig(
+        embedding=EmbeddingConfig(num_nodes=ds.graph.num_nodes, dim=16),
+        gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
+                            num_layers=1, dim=16) if gnn else None,
+        fanouts=(3,) if gnn else (),
+        relations=RELS,
+        loss="inbatch_softmax",
+    )
+    pc = PipelineConfig(
+        walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+        pair=PairConfig(win_size=2),
+        ego=EgoConfig(relations=list(RELS), fanouts=[3]) if gnn else None,
+        batch_pairs=64, walks_per_round=16,
+    )
+    eng = DistributedGraphEngine(ds.graph, num_partitions=2)
+    cfg = TrainerConfig(num_steps=steps, log_every=0, eval_at_end=False,
+                        seed=0, **cfg_kw)
+    return Graph4RecTrainer(ds, eng, mc, pc, cfg)
+
+
+class TestPhaseTimer:
+    def test_add_and_total(self):
+        t = PhaseTimer()
+        for _ in range(3):
+            t.add("h2d", 0.5)
+        assert t.total("h2d") == pytest.approx(1.5)
+        assert t.total("sample") == 0.0
+
+    def test_ring_extrapolates_by_count(self):
+        """Past capacity, the retained window is scaled by count: N equal
+        durations total N*d no matter how small the ring is."""
+        t = PhaseTimer(capacity=4)
+        for _ in range(10):
+            t.add("dispatch", 0.1)
+        assert t.total("dispatch") == pytest.approx(1.0)
+
+    def test_phase_context_records_duration(self):
+        t = PhaseTimer()
+        with t.phase("sample"):
+            pass
+        s = t.summary()
+        assert s["phases"]["sample"]["count"] == 1
+        assert s["phases"]["sample"]["total_s"] >= 0.0
+
+    def test_summary_accounting(self):
+        t = PhaseTimer()
+        t.add("sample", 0.2)      # producer side
+        t.add("batch_wait", 0.1)  # consumer side from here down
+        t.add("h2d", 0.2)
+        t.add("dispatch", 0.3)
+        t.add("loss_fetch", 0.1)
+        s = t.summary(wall_s=1.0, steps=10)
+        assert s["host_visible_s"] == pytest.approx(0.7)
+        assert s["device_residual_s"] == pytest.approx(0.3)
+        assert s["wall_us_per_step"] == pytest.approx(1e5)
+        assert s["phases"]["sample"]["frac_of_wall"] == pytest.approx(0.2)
+        assert set(s["phases"]) <= set(PHASES)
+
+    def test_phase_scope_nullcontext(self):
+        with phase_scope(None, "sample"):
+            pass
+        t = PhaseTimer()
+        with phase_scope(t, None):
+            pass
+        assert all(t.total(p) == 0.0 for p in PHASES)
+        with phase_scope(t, "h2d"):
+            pass
+        assert t.summary()["phases"]["h2d"]["count"] == 1
+
+    def test_handoff_probe_and_median(self):
+        per_item = measure_handoff_overhead(items=64)
+        assert 0.0 < per_item < 0.1  # a queue handoff is micro-, not deci-s
+        assert median([3.0, 1.0, 2.0]) == 2.0
+        assert median([4.0, 1.0, 2.0, 3.0]) == 2.5
+        with pytest.raises(ValueError):
+            median([])
+
+
+class TestExecutionPlan:
+    def test_explicit_settings_never_calibrate(self, ds):
+        tr = make_trainer(ds, steps=40, prefetch_batches=3,
+                          auto_backend=True)
+        res = tr.train()
+        assert res.plan["calibrated"] is False
+        assert res.plan["prefetch"] == 3
+        assert res.plan["sampling"] == "host"
+
+    def test_short_run_uses_legacy_default(self, ds):
+        tr = make_trainer(ds, steps=6)  # < calibrate_min_steps
+        res = tr.train()
+        assert res.plan["calibrated"] is False
+        assert res.plan["prefetch"] == 2  # legacy depth
+        assert "too short" in res.plan["reason"]
+
+    def test_auto_backend_off_uses_legacy_default(self, ds):
+        tr = make_trainer(ds, steps=40, auto_backend=False)
+        res = tr.train()
+        assert res.plan["calibrated"] is False
+        assert res.plan["prefetch"] == 2
+
+    def test_calibration_produces_measurements(self, ds):
+        tr = make_trainer(ds, steps=36, calibrate_min_steps=32)
+        res = tr.train()
+        assert res.plan["calibrated"] is True
+        m = res.plan["measurements"]
+        assert m["host_batch_s"] > 0 and m["step_s"] > 0
+        assert m["handoff_s"] > 0
+        assert res.plan["prefetch"] in (0, 2)
+        # the plan is cached: a second train() must not recalibrate
+        assert tr._plan is res.plan or tr._plan == res.plan
+
+    def test_cheap_sampler_degrades_to_serial(self, ds, monkeypatch):
+        """The walk-based 0.85x regression case: when the measured host cost
+        is too small for the overlap to beat the handoff, auto picks the
+        serial loop. Measurements are injected so the decision rule is
+        tested deterministically, not via wall clocks."""
+        tr = make_trainer(ds, gnn=False, steps=36)
+        monkeypatch.setattr(
+            Graph4RecTrainer, "_calibrate",
+            lambda self, params: {
+                "host_batch_s": 1e-4, "step_s": 5e-4, "handoff_s": 2e-4,
+            },
+        )
+        plan = tr._resolve_plan(tr.init_params())
+        assert plan["calibrated"] is True
+        assert plan["prefetch"] == 0
+        assert "serial" in plan["reason"]
+
+    def test_expensive_both_sides_picks_prefetch(self, ds, monkeypatch):
+        tr = make_trainer(ds, steps=36)
+        monkeypatch.setattr(
+            Graph4RecTrainer, "_calibrate",
+            lambda self, params: {
+                "host_batch_s": 5e-3, "step_s": 5e-3, "handoff_s": 5e-5,
+            },
+        )
+        plan = tr._resolve_plan(tr.init_params())
+        assert plan["prefetch"] == 2
+        assert "prefetch" in plan["reason"]
+
+    def test_auto_sampling_picks_fused_when_faster(self, ds, monkeypatch):
+        tr = make_trainer(ds, steps=36, sampling_backend="auto")
+        monkeypatch.setattr(
+            Graph4RecTrainer, "_calibrate",
+            lambda self, params: {
+                "host_batch_s": 5e-3, "step_s": 5e-3, "handoff_s": 5e-5,
+                "fused_step_s": 1e-3,
+            },
+        )
+        # _calibrate is mocked, so build the fused step the way the real
+        # calibration would have
+        ok, _ = tr._build_fused()
+        assert ok
+        plan = tr._resolve_plan(tr.init_params())
+        assert plan["sampling"] == "fused"
+        assert plan["prefetch"] == 0
+
+    def test_auto_run_matches_explicit_run_bitwise(self, ds):
+        """Calibration must not perturb the training stream: an auto run's
+        loss trajectory is bit-identical to an explicit run configured the
+        way the plan resolved."""
+        auto = make_trainer(ds, steps=36, calibrate_min_steps=32)
+        res_auto = auto.train()
+        assert res_auto.plan["calibrated"] is True
+        explicit = make_trainer(
+            ds, steps=36, prefetch_batches=res_auto.plan["prefetch"],
+            auto_backend=False,
+        )
+        res_exp = explicit.train()
+        np.testing.assert_array_equal(res_auto.losses, res_exp.losses)
+
+    def test_walk_based_auto_matches_serial_bitwise(self, ds):
+        """Whatever the plan picks for the cheap walk-based sampler, the
+        result is the serial stream, bit for bit."""
+        auto = make_trainer(ds, gnn=False, steps=36, calibrate_min_steps=32)
+        res_auto = auto.train()
+        serial = make_trainer(ds, gnn=False, steps=36, prefetch_batches=0,
+                              auto_backend=False)
+        res_serial = serial.train()
+        np.testing.assert_array_equal(res_auto.losses, res_serial.losses)
+
+
+class TestAttributionInTrainer:
+    def test_attribution_off_by_default(self, ds):
+        res = make_trainer(ds, steps=4).train()
+        assert res.attribution is None
+
+    def test_attribution_summary_shape(self, ds):
+        res = make_trainer(ds, steps=6, attribution=True,
+                           prefetch_batches=2).train()
+        a = res.attribution
+        assert a["steps"] == 6
+        assert a["wall_s"] > 0
+        for phase in ("sample", "assemble", "batch_wait", "h2d", "dispatch"):
+            assert a["phases"][phase]["count"] > 0, phase
+        assert a["host_visible_s"] <= a["wall_s"] + 1e-6
+
+    def test_attribution_serial_mode(self, ds):
+        res = make_trainer(ds, steps=6, attribution=True,
+                           prefetch_batches=0).train()
+        assert res.attribution["phases"]["dispatch"]["count"] == 6
+
+    def test_attribution_fused_mode(self, ds):
+        res = make_trainer(ds, steps=6, attribution=True,
+                           sampling_backend="fused").train()
+        a = res.attribution
+        assert a["phases"]["dispatch"]["count"] == 6
+        # fused mode bypasses the host pipeline and the stager entirely
+        assert "sample" not in a["phases"]
+        assert "h2d" not in a["phases"]
+
+
+class TestCommittedBenchmarkPins:
+    """Regression pins on the committed BENCH_throughput.json: the ratios
+    this PR's tentpole flipped must stay flipped in the committed numbers.
+    (CI re-times nothing — shared-runner wall clocks are noise; the bench
+    is rerun and the JSON recommitted whenever the pipeline changes.)"""
+
+    @pytest.fixture(scope="class")
+    def bench(self):
+        with open(_JSON_PATH) as f:
+            return json.load(f)
+
+    def test_attribution_section_covers_backend_matrix(self, bench):
+        attr = bench["step_attribution"]
+        combos = [k for k in attr if "/" in k]
+        assert len(combos) >= 4, combos
+        engines = {c.split("/")[0] for c in combos}
+        modes = {c.split("/")[1] for c in combos}
+        assert {"inproc", "mp"} <= engines
+        assert {"serial", "prefetch", "fused"} <= modes
+        for c in combos:
+            entry = attr[c]
+            assert entry["phases"], c
+            assert entry["wall_s"] > 0
+            assert entry["steps"] > 0
+
+    def test_mp_pipeline_no_longer_a_regression(self, bench):
+        assert bench["engine_service"]["pipeline_mp_speedup"] >= 1.0
+
+    def test_fused_pipeline_speedup(self, bench):
+        assert bench["walk_fusion"]["pipeline_fused_speedup"] >= 1.5
+
+    def test_walk_based_auto_not_slower_than_serial(self, bench):
+        assert bench["pipeline/walk-based"]["speedup_auto"] >= 1.0

@@ -95,9 +95,14 @@ def fused_pair_counts(fs, pc, num_batches, seed, num_nodes):
     counts = np.zeros(num_nodes * num_nodes, np.int64)
     for i in range(num_batches):
         batch = sample(keys[i])
-        src, dst = batch["src"][0], batch["dst"][0]
-        if fs.ego is not None:  # GNN layout: level 0 carries the centers
-            src, dst = src[0][:, 0], dst[0][:, 0]
+        if "shared" in batch:  # shared-tower layout: gather level-0 centers
+            centers = batch["shared"][0][0][:, 0]
+            src = centers[batch["src_sel"]]
+            dst = centers[batch["dst_sel"]]
+        else:
+            src, dst = batch["src"][0], batch["dst"][0]
+            if fs.ego is not None:  # GNN layout: level 0 carries the centers
+                src, dst = src[0][:, 0], dst[0][:, 0]
         src, dst = np.asarray(src), np.asarray(dst)
         ok = src >= 0
         np.add.at(counts, src[ok] * num_nodes + dst[ok], 1)
@@ -209,10 +214,15 @@ class TestEgoConformance:
         pc = dataclasses.replace(pipe_cfg(ego=ego, batch_pairs=16), order=order)
         fs = FusedSampler(g, pc)
         batch = jax.jit(fs.sample)(jax.random.PRNGKey(0))
-        for part in ("src", "dst"):
-            levels, _ = batch[part]
+        if "shared" in batch:  # walk_ego_pair: towers themselves are PAD
+            levels, _ = batch["shared"]
             for l in levels:
-                assert (np.asarray(l) == PAD).all(), (order, part)
+                assert (np.asarray(l) == PAD).all(), order
+        else:
+            for part in ("src", "dst"):
+                levels, _ = batch[part]
+                for l in levels:
+                    assert (np.asarray(l) == PAD).all(), (order, part)
 
     def test_degree0_and_pad_centers_propagate_pad(self):
         g = dense_bipartite(n_u=6, drop=(3,))
@@ -277,10 +287,7 @@ class TestSlotConformance:
                 np.asarray(fs._bag_counts[name]), np.asarray(want[name])
             )
 
-    @pytest.mark.parametrize("slot_mode", ["values", "bag"])
-    def test_batch_structure_matches_device_batch(self, toy_ds, slot_mode):
-        """The fused batch is pytree-compatible with ``device_batch`` (same
-        keys, same part layouts, same shapes) so loss_fn runs unchanged."""
+    def _gnn_cfgs(self, toy_ds, slot_mode):
         g = toy_ds.graph
         slots = (SlotSpec("slot0", 64, 3), SlotSpec("slot1", 64, 3))
         mc = Graph4RecConfig(
@@ -291,8 +298,19 @@ class TestSlotConformance:
             fanouts=(3, 2), relations=RELS,
             use_side_info=True, slot_mode=slot_mode,
         )
+        return g, mc
+
+    @pytest.mark.parametrize("slot_mode", ["values", "bag"])
+    def test_batch_structure_matches_device_batch(self, toy_ds, slot_mode):
+        """The fused batch is pytree-compatible with ``device_batch`` (same
+        keys, same part layouts, same shapes) so loss_fn runs unchanged.
+        walk_ego_pair uses the shared-tower layout instead, covered by
+        ``test_shared_tower_layout_and_loss_equivalence``."""
+        g, mc = self._gnn_cfgs(toy_ds, slot_mode)
         ego = EgoConfig(relations=list(RELS), fanouts=[3, 2])
-        pc = pipe_cfg(ego=ego, batch_pairs=32)
+        pc = dataclasses.replace(
+            pipe_cfg(ego=ego, batch_pairs=32), order="walk_pair_ego"
+        )
         bspecs = model_lib.bag_slot_specs(mc)
         vspecs = model_lib.value_slot_specs(mc)
         fs = FusedSampler(g, pc, value_slots=vspecs, bag_slots=bspecs)
@@ -311,6 +329,43 @@ class TestSlotConformance:
         # and the model consumes it
         params = model_lib.init_model_params(jax.random.PRNGKey(1), mc)
         assert np.isfinite(float(model_lib.loss_fn(params, mc, fused)))
+
+    @pytest.mark.parametrize("slot_mode", ["values", "bag"])
+    def test_shared_tower_layout_and_loss_equivalence(self, toy_ds, slot_mode):
+        """walk_ego_pair emits ONE ego tower per (walk, position) plus pair
+        index vectors; the loss over the shared layout is bitwise identical
+        to the loss over the equivalent gathered-tower batch (per-tower
+        encoder compute is row-independent)."""
+        g, mc = self._gnn_cfgs(toy_ds, slot_mode)
+        ego = EgoConfig(relations=list(RELS), fanouts=[3, 2])
+        pc = pipe_cfg(ego=ego, batch_pairs=32)  # default order=walk_ego_pair
+        bspecs = model_lib.bag_slot_specs(mc)
+        vspecs = model_lib.value_slot_specs(mc)
+        fs = FusedSampler(g, pc, value_slots=vspecs, bag_slots=bspecs)
+        fused = jax.jit(fs.sample)(jax.random.PRNGKey(0))
+        assert {"shared", "src_sel", "dst_sel"} <= set(fused)
+        W, L = fs.num_walks, pc.walk.walk_len
+        levels, slots = fused["shared"]
+        assert levels[0].shape[0] == W * L
+        for sel in (fused["src_sel"], fused["dst_sel"]):
+            arr = np.asarray(sel)
+            assert arr.shape == (32,)
+            assert ((arr >= 0) & (arr < W * L)).all()
+
+        # gathered-tower equivalent batch (the pre-optimization layout)
+        gathered = {k: v for k, v in fused.items()
+                    if k not in ("shared", "src_sel", "dst_sel")}
+        for name in ("src", "dst"):
+            sel = fused[f"{name}_sel"]
+            glv = [l[sel] for l in levels]
+            gsl = ([{k: v[sel] for k, v in s.items()} for s in slots]
+                   if slots is not None else None)
+            gathered[name] = (glv, gsl)
+        params = model_lib.init_model_params(jax.random.PRNGKey(1), mc)
+        got = model_lib.loss_fn(params, mc, fused)
+        want = model_lib.loss_fn(params, mc, gathered)
+        assert np.isfinite(float(got))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ------------------------------------------------------------- end to end

@@ -171,6 +171,71 @@ class TestBitwiseEquivalence:
                 np.testing.assert_array_equal(c.gather(h)[0], refs[i])
 
 
+@pytest.mark.quick
+class TestHybridLocalServing:
+    """``local_threshold``: small rounds served in-process by the client
+    over zero-copy views of its own shard segments, bitwise identical to
+    worker replies, with the served == issued stats invariant intact."""
+
+    def test_local_round_bitwise_matches_workers_and_inproc(self, ds, inproc, client):
+        nodes = np.random.default_rng(13).integers(0, ds.graph.num_nodes, 200)
+        queries = [(nodes, RELS[0], 4, -1), (nodes[:60], RELS[1], 3, -1)]
+        ref = inproc.sample_many(np.random.default_rng(21), queries)
+        remote = client.sample_many(np.random.default_rng(21), queries)
+        with GraphClient(
+            ds.graph, num_partitions=4, num_workers=2, local_threshold=10_000
+        ) as c:
+            local = c.sample_many(np.random.default_rng(21), queries)
+            # the round really was served locally, not by a worker
+            assert c.aggregate_stats()["local_neighbor_requests"] == len(nodes) + 60
+        for a, b, d in zip(ref, remote, local):
+            np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(a, d)
+
+    def test_rng_stream_identical_across_serving_modes(self, ds):
+        """A local round consumes the caller's generator exactly like a
+        remote round, so a later query is unaffected by who served earlier
+        ones — the property that makes the threshold a pure perf knob."""
+        nodes = np.arange(50)
+        follow = np.arange(120)
+        outs = {}
+        for thr in (0, 10_000):
+            with GraphClient(
+                ds.graph, num_partitions=4, num_workers=1, local_threshold=thr
+            ) as c:
+                rng = np.random.default_rng(4)
+                c.sample_many(rng, [(nodes, RELS[0], 3, -1)])
+                outs[thr] = c.sample_many(rng, [(follow, RELS[1], 2, -1)])[0]
+        np.testing.assert_array_equal(outs[0], outs[10_000])
+
+    def test_mixed_local_remote_stats_invariant(self, ds):
+        with GraphClient(
+            ds.graph, num_partitions=4, num_workers=2, local_threshold=100
+        ) as c:
+            rng = np.random.default_rng(0)
+            c.sample_many(rng, [(np.arange(80), RELS[0], 2, -1)])  # local
+            c.sample_many(rng, [(np.arange(300), RELS[0], 2, -1)])  # remote
+            agg = c.aggregate_stats()
+            assert agg["local_neighbor_requests"] == 80
+            assert agg["local_batches"] == 1
+            # served (workers + local) == issued (client mirror)
+            assert agg["neighbor_requests"] == c.stats.neighbor_requests == 380
+            c.reset_stats()
+            agg = c.aggregate_stats()
+            assert agg["neighbor_requests"] == 0
+            assert agg["local_neighbor_requests"] == 0
+
+    def test_threshold_zero_is_all_remote(self, ds, client):
+        # the module fixture client has local_threshold=0: nothing local
+        client.reset_stats()
+        client.sample_many(
+            np.random.default_rng(1), [(np.arange(16), RELS[0], 2, -1)]
+        )
+        agg = client.aggregate_stats()
+        assert agg["local_neighbor_requests"] == 0
+        assert agg["neighbor_requests"] == 16  # all worker-served
+
+
 class TestPipelineEquivalence:
     def test_walks_egos_pairs_bitwise(self, ds, inproc, client):
         """Fixed seed -> identical TrainBatches from either backend."""
@@ -204,6 +269,9 @@ class TestPipelineEquivalence:
                 TrainerConfig(
                     num_steps=8, log_every=0, eval_at_end=False, seed=2,
                     engine_backend=backend, num_engine_workers=2,
+                    # force every round across the process boundary — this
+                    # test is about the worker-served path specifically
+                    engine_local_threshold=0,
                 ),
             )
             with tr:
@@ -287,6 +355,9 @@ class TestFailureModes:
             TrainerConfig(
                 num_steps=50, log_every=0, eval_at_end=False,
                 engine_backend="mp", num_engine_workers=2,
+                # hybrid serving would answer these tiny rounds in-process
+                # and never notice the corpses; this test needs the boundary
+                engine_local_threshold=0,
             ),
         )
         client = tr.engine

@@ -58,6 +58,10 @@ def build_trainer(ds, sparse, gnn_type="lightgcn", side_info=False,
         batch_pairs=64, walks_per_round=32,
     )
     eng = DistributedGraphEngine(g, num_partitions=2)
+    # The toy graph sits below the default sparse/dense crossover
+    # (sparse_min_rows) — force the sparse path so these tests keep
+    # exercising gather→step→scatter rather than the dense reroute.
+    cfg_kw.setdefault("sparse_min_rows", 0)
     return Graph4RecTrainer(
         ds, eng, mc, pc,
         TrainerConfig(num_steps=steps, log_every=0, seed=0, sparse_lr=0.5,
