@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize bench-attr
+.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize bench-attr bench-trace
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -31,3 +31,6 @@ bench-sanitize:
 
 bench-attr:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --attribution
+
+bench-trace:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --telemetry

@@ -660,6 +660,60 @@ def sanitize_bench(quick: bool = True, results: Dict = None) -> None:
         results["sanitize"] = out
 
 
+def telemetry_bench(quick: bool = True, results: Dict = None) -> None:
+    """Telemetry-layer overhead (`--telemetry` / `make bench-trace`).
+
+    Runs the trainer with the unified telemetry layer (``repro.obs``) off vs
+    on, reporting the wall-time overhead of span recording + metric updates
+    on the prefetch pipeline (the most instrumented configuration: stager
+    gauges, phase spans, client round spans all active). The disabled arm is
+    the production default and must stay within noise of a build that never
+    had telemetry: every instrumented site guards on a preresolved handle
+    (``if tracer is not None``), so "off" costs one attribute load + is-None
+    test per site. Arms are interleaved per rep so machine drift cancels.
+    """
+    from repro.obs import Telemetry
+
+    ds = dataset("toy")
+    steps = 40 if quick else 120
+    out: Dict = {"dataset": "toy", "steps": steps}
+    tel = Telemetry()
+    trainers = {
+        mode: trainer(
+            ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
+            prefetch_batches=2, telemetry=(tel if mode == "traced" else None),
+        )
+        for mode in ("off", "traced")
+    }
+    for tr in trainers.values():
+        tr.train()  # compile + warm
+    best: Dict[str, float] = {}
+    for _ in range(3):  # interleaved: both arms see the same machine
+        for mode, tr in trainers.items():
+            res = tr.train()
+            best[mode] = min(best.get(mode, 1e9), res.wall_time_s)
+    overhead = best["traced"] / best["off"]
+    events = len(tel.chrome_trace()["traceEvents"])
+    for mode in ("off", "traced"):
+        emit(
+            f"telemetry/{mode}", best[mode] / steps * 1e6,
+            f"pairs_per_sec={steps * tr.pipe_cfg.batch_pairs / best[mode]:.0f}",
+        )
+    emit("telemetry/overhead", 0.0,
+         f"overhead={overhead:.3f}x trace_events={events}")
+    if results is not None:
+        results["telemetry"] = {
+            "wall_s_off": round(best["off"], 4),
+            "wall_s_traced": round(best["traced"], 4),
+            "overhead": round(overhead, 4),
+            "pairs_per_sec_off": round(
+                steps * tr.pipe_cfg.batch_pairs / best["off"], 1),
+            "pairs_per_sec_traced": round(
+                steps * tr.pipe_cfg.batch_pairs / best["traced"], 1),
+            "trace_events": events,
+        }
+
+
 def kernel_micro(quick: bool = True, results: Dict = None) -> None:
     from repro.kernels import ops
 
@@ -747,6 +801,12 @@ def run_attr_only(quick: bool = True) -> Dict:
     return _run_one_arm(attribution_bench, quick)
 
 
+def run_trace_only(quick: bool = True) -> Dict:
+    """`--telemetry` / `make bench-trace`: the telemetry-overhead arm,
+    merged into the JSON."""
+    return _run_one_arm(telemetry_bench, quick)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     grp = ap.add_mutually_exclusive_group()
@@ -764,6 +824,8 @@ if __name__ == "__main__":
                      help="run only the transfer-guard sanitizer arm")
     arm.add_argument("--attribution", action="store_true",
                      help="run only the per-step time-attribution arm")
+    arm.add_argument("--telemetry", action="store_true",
+                     help="run only the telemetry-overhead arm")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.step:
@@ -776,5 +838,7 @@ if __name__ == "__main__":
         run_sanitize_only(quick=not args.full)
     elif args.attribution:
         run_attr_only(quick=not args.full)
+    elif args.telemetry:
+        run_trace_only(quick=not args.full)
     else:
         run(quick=not args.full)

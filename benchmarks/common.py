@@ -55,6 +55,7 @@ def trainer(
     sampling_backend: str = "host",
     sanitize_transfers: bool = True,
     attribution: bool = False,
+    telemetry=None,
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -104,7 +105,8 @@ def trainer(
                       num_engine_partitions=num_partitions,
                       sampling_backend=sampling_backend,
                       sanitize_transfers=sanitize_transfers,
-                      attribution=attribution),
+                      attribution=attribution,
+                      telemetry=telemetry),
     )
 
 

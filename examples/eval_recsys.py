@@ -40,7 +40,8 @@ RELS = ("u2click2i", "i2click2u")
 
 
 def build_trainer(ds, model: str, steps: int, dim: int, seed: int,
-                  engine_backend: str, engine_workers: int) -> Graph4RecTrainer:
+                  engine_backend: str, engine_workers: int,
+                  telemetry=None) -> Graph4RecTrainer:
     walk_based = model in WALK_MODELS
     mc = Graph4RecConfig(
         embedding=EmbeddingConfig(num_nodes=ds.graph.num_nodes, dim=dim),
@@ -63,7 +64,8 @@ def build_trainer(ds, model: str, steps: int, dim: int, seed: int,
         ds, engine, mc, pc,
         TrainerConfig(num_steps=steps, log_every=0, sparse_lr=1.0, seed=seed,
                       eval_at_end=False, engine_backend=engine_backend,
-                      num_engine_workers=engine_workers),
+                      num_engine_workers=engine_workers,
+                      telemetry=telemetry),
     )
 
 
@@ -92,6 +94,11 @@ def main() -> None:
     ap.add_argument("--load-embeddings", default=None, metavar="PATH",
                     help="skip training+inference; evaluate a matrix saved "
                          "by --export-embeddings (single scenario only)")
+    ap.add_argument("--trace", default=None, metavar="OUT.JSON",
+                    help="enable the unified telemetry layer (repro.obs) "
+                         "across every scenario — training, inference, and "
+                         "retrieval searches — and write one Perfetto-"
+                         "loadable Chrome trace here at the end")
     ap.add_argument("--report", default=None, help="write JSON results here")
     ap.add_argument("--markdown", default=None, help="write rendered table here")
     ap.add_argument("--seed", type=int, default=0)
@@ -101,6 +108,11 @@ def main() -> None:
     models = args.models.split(",")
     strategies = tuple(args.strategies.split(","))
     ivf = IVFConfig(nlist=args.ivf_nlist, nprobe=args.ivf_nprobe, seed=args.seed)
+    telemetry = None
+    if args.trace:
+        from repro.obs import Telemetry
+
+        telemetry = Telemetry()
     results = []
     for ds_name in datasets:
         ds = generate(SPECS[ds_name], seed=args.seed)
@@ -118,6 +130,7 @@ def main() -> None:
                 trainer = build_trainer(
                     ds, model, args.steps, args.dim, args.seed,
                     args.engine_backend, args.engine_workers,
+                    telemetry=telemetry,
                 )
                 with trainer:
                     t0 = time.perf_counter()
@@ -141,7 +154,7 @@ def main() -> None:
                 emb[ds.num_users : ds.num_users + ds.num_items],
                 train_pairs, eval_pairs,
                 top_k=args.top_k, top_n=args.top_n, strategies=strategies,
-                method=args.method, ivf=ivf,
+                method=args.method, ivf=ivf, telemetry=telemetry,
             )
             eval_s = time.perf_counter() - t0
             rec = {
@@ -157,6 +170,10 @@ def main() -> None:
                   f"(train {train_s:.1f}s, embed {embed_s:.1f}s, "
                   f"eval {eval_s:.1f}s)")
 
+    if telemetry is not None:
+        print(telemetry.text_summary())
+        print("trace ->", telemetry.write_trace(args.trace),
+              "(open in https://ui.perfetto.dev)")
     payload = {"split": args.split, "seed": args.seed, "results": results}
     if args.report:
         with open(args.report, "w") as f:

@@ -66,6 +66,11 @@ def main() -> None:
                     help="mp backend: rounds with at most this many total "
                          "nodes are served in-process over the client's own "
                          "shard views (0 = every round goes to a worker)")
+    ap.add_argument("--trace", default=None, metavar="OUT.JSON",
+                    help="enable the unified telemetry layer (repro.obs) and "
+                         "write a Perfetto-loadable Chrome trace here after "
+                         "training; also prints the metrics/span text "
+                         "summary (docs/observability.md)")
     ap.add_argument("--warm-start", default=None, help="npz of pre-trained tables")
     ap.add_argument("--save", default=None)
     ap.add_argument("--eval-recall", default="device",
@@ -126,6 +131,11 @@ def main() -> None:
         ego=None if walk_based else EgoConfig(relations=list(rels), fanouts=[4, 3]),
         order=args.order, batch_pairs=args.batch_pairs,
     )
+    telemetry = None
+    if args.trace:
+        from repro.obs import Telemetry
+
+        telemetry = Telemetry()
     trainer = Graph4RecTrainer(
         ds, engine, model_cfg, pipe_cfg,
         TrainerConfig(num_steps=args.steps, sparse_lr=1.0, log_every=50,
@@ -138,7 +148,8 @@ def main() -> None:
                       auto_backend=not args.no_auto_backend,
                       attribution=args.attribution,
                       eval_method=args.eval_recall,
-                      eval_max_users=args.eval_max_users),
+                      eval_max_users=args.eval_max_users,
+                      telemetry=telemetry),
     )
     params = trainer.init_params()
     if args.warm_start:
@@ -173,6 +184,10 @@ def main() -> None:
                   f"{agg['neighbor_requests']} queries in {agg['batches']} "
                   f"request rounds ({agg['busy_s']:.2f}s busy, "
                   f"{agg['local_neighbor_requests']} answered in-process)")
+        if telemetry is not None:
+            print(telemetry.text_summary())
+            print("trace ->", telemetry.write_trace(args.trace),
+                  "(open in https://ui.perfetto.dev)")
     if args.save:
         print("saved", checkpoint.save(args.save, result.params))
     if args.export_embeddings:

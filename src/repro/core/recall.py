@@ -33,6 +33,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Optional, Sequence
 
+import time
+
 import numpy as np
 
 from repro.retrieval import (
@@ -97,13 +99,19 @@ def _make_searchers(
     item_chunk: int,
     query_chunk: int,
     ivf: Optional[IVFConfig],
+    telemetry=None,
 ) -> Dict[str, Callable]:
-    """One top-k callable per corpus ("item", "user"), method-specific."""
+    """One top-k callable per corpus ("item", "user"), method-specific.
+
+    With ``telemetry`` wired, every searcher is wrapped so each retrieval
+    search emits a ``retrieval.<corpus>`` span and observes the
+    ``retrieval.search_ns`` latency histogram — the backends themselves
+    stay untouched."""
     if method == "bruteforce":
         fn = brute_force_topk
-        return {"item": lambda q, k, ex=None: fn(q, ie, k, exclude=ex),
-                "user": lambda q, k, ex=None: fn(q, ue, k, exclude=ex)}
-    if method == "device":
+        searchers = {"item": lambda q, k, ex=None: fn(q, ie, k, exclude=ex),
+                     "user": lambda q, k, ex=None: fn(q, ue, k, exclude=ex)}
+    elif method == "device":
         def make(corpus):
             def search(q, k, ex=None):
                 return chunked_topk(
@@ -111,15 +119,35 @@ def _make_searchers(
                     query_chunk=query_chunk, backend=backend,
                 )
             return search
-        return {"item": make(ie), "user": make(ue)}
-    if method == "ivf":
+        searchers = {"item": make(ie), "user": make(ue)}
+    elif method == "ivf":
         cfg = ivf or IVFConfig()
         idx = {"item": IVFIndex.build(ie, cfg), "user": IVFIndex.build(ue, cfg)}
-        return {
+        searchers = {
             name: (lambda ix: lambda q, k, ex=None: ix.search(q, k, exclude=ex))(ix)
             for name, ix in idx.items()
         }
-    raise ValueError(f"unknown recall method {method!r}")
+    else:
+        raise ValueError(f"unknown recall method {method!r}")
+    if telemetry is not None:
+        tracer = telemetry.tracer
+        hist = telemetry.metrics.histogram("retrieval.search_ns")
+
+        def wrap(corpus_name, inner):
+            def traced(q, k, ex=None):
+                t0 = time.perf_counter_ns()
+                res = inner(q, k, ex)
+                dur = time.perf_counter_ns() - t0
+                tracer.add_span(
+                    f"retrieval.{corpus_name}", "retrieval", t0, dur,
+                    {"method": method, "queries": len(q)},
+                )
+                hist.observe(dur)
+                return res
+            return traced
+
+        searchers = {name: wrap(name, s) for name, s in searchers.items()}
+    return searchers
 
 
 # --------------------------------------------------------------- evaluation
@@ -138,6 +166,7 @@ def evaluate_recall(
     item_chunk: int = 8192,
     user_chunk: int = 512,
     ivf: Optional[IVFConfig] = None,
+    telemetry=None,  # repro.obs.Telemetry: traces every retrieval search
 ) -> Dict[str, float]:
     """Recall/HitRate/NDCG @ top_k per strategy over the held-out pairs.
 
@@ -176,7 +205,8 @@ def evaluate_recall(
         users = list(rng.choice(np.array(users), size=max_users, replace=False))
 
     search = _make_searchers(
-        method, ue, ie, backend, item_chunk, user_chunk, ivf
+        method, ue, ie, backend, item_chunk, user_chunk, ivf,
+        telemetry=telemetry,
     )
     uarr = np.array(users, dtype=np.int64)
     truths = [held[u] for u in users]

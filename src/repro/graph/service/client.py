@@ -73,11 +73,28 @@ class EngineWorkerError(RuntimeError):
     request's slab slot (it replied with an error, or is dead): the client
     then recycles the slot. On a timeout the worker may still be writing,
     so the slot is deliberately leaked instead of risking reuse.
+
+    Diagnostic context rides on the exception so a crash report is
+    actionable without a re-run: ``worker_id``, the last request id
+    (``rid``), and the worker's counter snapshot at failure (``stats`` —
+    shipped inside the error payload, or the last stats round the client
+    saw for a worker that died / timed out; None when no round ever
+    completed).
     """
 
-    def __init__(self, message: str, slot_safe: bool = False):
+    def __init__(
+        self,
+        message: str,
+        slot_safe: bool = False,
+        worker_id: Optional[int] = None,
+        rid: Optional[int] = None,
+        stats: Optional[Dict] = None,
+    ):
         super().__init__(message)
         self.slot_safe = slot_safe
+        self.worker_id = worker_id
+        self.rid = rid
+        self.stats = stats
 
 
 @dataclasses.dataclass
@@ -92,9 +109,13 @@ class PendingRequest:
     slots: Dict[int, int]
     # balanced ("sampleq") calls: per-query (n, k) plus the slot layout
     # (computed once at submit; the worker derives the identical layout
-    # from the same shapes); both None for owner-dispatch fan-out
+    # from the same shapes); both None for owner-dispatch fan-out.
+    # ``qpickle`` marks the request-fits/replies-don't case: the request
+    # still rides the slab but the worker answers "pickleq" (qlayout None).
     qshapes: Optional[List[Tuple[int, int]]] = None
     qlayout: Optional[List[Tuple[int, int, int]]] = None
+    qpickle: bool = False
+    t0_ns: int = 0  # submit timestamp when tracing (0 = telemetry off)
 
 
 def _reap(procs, conns, segs, reader_stop) -> None:
@@ -148,6 +169,7 @@ class GraphClient:
         slot_bytes: int = 4 << 20,
         pin_workers: bool = False,
         local_threshold: int = 0,
+        telemetry=None,
     ):
         """``slab_slots`` x ``slot_bytes`` is each worker's slab geometry: a
         ring of slots that request/reply payloads land in. In-flight requests
@@ -182,6 +204,14 @@ class GraphClient:
         a pipe round-trip costs more than the sampling itself, and on hosts
         where workers share cores with the trainer the IPC is pure loss.
         Large rounds still go to the worker fleet.
+
+        ``telemetry`` (a ``repro.obs.Telemetry``, default None = disabled)
+        turns on request-round tracing and metrics: dispatch/wait/compose
+        spans per round, round-latency histograms, slab-slot occupancy and
+        pickle-fallback counters, and — because workers are spawned with
+        ``trace=True`` — worker serve spans collected on the ``stats``
+        control round, clock-offset-corrected into the client's timeline.
+        Disabled costs one ``is None`` test per instrumented site.
         """
         if hasattr(graph, "graph"):  # accept a DistributedGraphEngine
             engine = graph
@@ -210,6 +240,25 @@ class GraphClient:
             "neighbor_requests": 0, "sub_requests": 0, "batches": 0,
             "busy_ns": 0,
         }
+        # telemetry (optional): tracer + metric handles resolved once so the
+        # hot path pays one attribute load + is-None test when disabled
+        self._tracer = telemetry.tracer if telemetry is not None else None
+        if telemetry is not None:
+            m = telemetry.metrics
+            self._m_round_ns = m.histogram("client.round_latency_ns")
+            self._m_rounds_worker = m.counter("client.rounds_worker")
+            self._m_rounds_local = m.counter("client.rounds_local")
+            self._m_pickle = m.counter("client.pickle_fallback")
+            self._m_slab = m.gauge("client.slab_slots_inflight")
+        else:
+            self._m_round_ns = None
+            self._m_rounds_worker = None
+            self._m_rounds_local = None
+            self._m_pickle = None
+            self._m_slab = None
+        # last stats snapshot seen per worker (control rounds + err payloads):
+        # attached to EngineWorkerError when a worker dies or times out
+        self._last_stats: Dict[int, Dict] = {}
 
         # Everything allocated below (shm segments, worker processes) is
         # reaped if ANY construction step fails — a failed __init__ must not
@@ -252,7 +301,7 @@ class GraphClient:
                 proc = ctx.Process(
                     target=worker_main,
                     args=(w, manifests, child_conn, self._slabs[w].name,
-                          self.slot_bytes),
+                          self.slot_bytes, self._tracer is not None),
                     name=f"repro-graph-worker-{w}",
                     daemon=True,
                 )
@@ -396,10 +445,20 @@ class GraphClient:
                     tag, payload = self._inbox.pop((w, rid))
                     if tag == "err":
                         # the worker answered (and survives): slot reusable
+                        if isinstance(payload, dict):
+                            tb = payload.get("traceback")
+                            snap = payload.get("stats")
+                        else:  # plain-string payload (unknown-op reply)
+                            tb, snap = payload, None
+                        detail = f"\n{tb}"
+                        if snap is not None:
+                            self._last_stats[w] = snap
+                            detail += f"\nworker {w} stats at failure: {snap}"
                         raise EngineWorkerError(
                             f"graph worker {w} failed serving request {rid}:"
-                            f"\n{payload}",
+                            + detail,
                             slot_safe=True,
+                            worker_id=w, rid=rid, stats=snap,
                         )
                     return payload
                 if w in self._dead:
@@ -407,16 +466,21 @@ class GraphClient:
                         f"graph worker {w} (pid {self._procs[w].pid}) "
                         f"{self._dead[w]} while request {rid} was in flight",
                         slot_safe=True,  # dead workers write nothing more
+                        worker_id=w, rid=rid,
+                        stats=self._last_stats.get(w),
                     )
                 if self._closed:
                     raise EngineWorkerError(
-                        "GraphClient was shut down", slot_safe=True
+                        "GraphClient was shut down", slot_safe=True,
+                        worker_id=w, rid=rid,
                     )
                 if time.monotonic() > deadline:
                     # worker may still be writing this slot: do NOT reuse it
                     raise EngineWorkerError(
                         f"graph worker {w} request {rid} timed out "
-                        f"after {self.request_timeout:.0f}s"
+                        f"after {self.request_timeout:.0f}s",
+                        worker_id=w, rid=rid,
+                        stats=self._last_stats.get(w),
                     )
                 self._cv.wait(timeout=0.1)
 
@@ -436,6 +500,16 @@ class GraphClient:
             for w in range(self.num_workers):
                 self._send(w, (op, rid))
         return [self._wait_reply(w, rid) for w in range(self.num_workers)]
+
+    def _control_one(self, w: int, op: str):
+        """One control round against a single worker (serial — the stats
+        round brackets it with timestamps for clock-offset estimation)."""
+        if self._closed:
+            raise RuntimeError("GraphClient is shut down")
+        with self._lock:
+            rid = self._rid = self._rid + 1
+            self._send(w, (op, rid))
+        return self._wait_reply(w, rid)
 
     def _route(self, nodes: np.ndarray):
         """Sort-based owner routing: one stable argsort instead of P boolean
@@ -464,6 +538,7 @@ class GraphClient:
         """
         if self._closed:
             raise RuntimeError("GraphClient is shut down")
+        t0_ns = time.perf_counter_ns() if self._tracer is not None else 0
         P = self.num_partitions
         outs: List[np.ndarray] = []
         qshapes: List[Tuple[int, int]] = []
@@ -492,12 +567,18 @@ class GraphClient:
             )
             routed.append((route, relation, num_samples, pad_id, seed))
 
-        qlayout = (
-            shm_lib.sampleq_layout(qshapes, self.slot_bytes)
-            if self.dispatch == "balanced"
-            else None
-        )
-        if qlayout is not None and any(n for n, _ in qshapes):
+        qlayout = qreq = None
+        if self.dispatch == "balanced":
+            qlayout = shm_lib.sampleq_layout(qshapes, self.slot_bytes)
+            if qlayout is not None:
+                qreq = [(a, b) for a, b, _ in qlayout]
+            else:
+                # replies overflow the slot but the request region fits:
+                # keep the balanced whole-call exchange — the worker samples
+                # in caller order and pickles the reply back ("pickleq") —
+                # instead of degrading to owner fan-out
+                qreq = shm_lib.sampleq_request_layout(qshapes, self.slot_bytes)
+        if qreq is not None and any(n for n, _ in qshapes):
             with self._state_lock:
                 # least-loaded worker, round-robin among ties so sequential
                 # (sync) callers still exercise the whole fleet
@@ -511,8 +592,8 @@ class GraphClient:
             slot = self._reserve_slot(w)
             try:
                 # the slot is exclusively ours: slab writes need no lock
-                for (route, *_), (n, _k), (a_off, b_off, _) in zip(
-                    routed, qshapes, qlayout
+                for (route, *_), (n, _k), (a_off, b_off) in zip(
+                    routed, qshapes, qreq
                 ):
                     order, sorted32, _starts, _cross = route
                     np.copyto(
@@ -533,9 +614,15 @@ class GraphClient:
             except BaseException:
                 self._release_slot(w, slot)
                 raise
+            if self._tracer is not None:
+                self._tracer.add_span(
+                    "client.dispatch", "client", t0_ns,
+                    time.perf_counter_ns() - t0_ns, {"rid": rid},
+                )
             return PendingRequest(
                 rid=rid, outs=outs, plan={w: []}, slots={w: slot},
-                qshapes=qshapes, qlayout=qlayout,
+                qshapes=qshapes, qlayout=qlayout, qpickle=qlayout is None,
+                t0_ns=t0_ns,
             )
 
         # owner dispatch (or a call too large for a slab slot): fan the
@@ -565,7 +652,14 @@ class GraphClient:
             for w, slot in slots.items():
                 self._release_slot(w, slot)
             raise
-        return PendingRequest(rid=rid, outs=outs, plan=plan, slots=slots)
+        if self._tracer is not None:
+            self._tracer.add_span(
+                "client.dispatch", "client", t0_ns,
+                time.perf_counter_ns() - t0_ns, {"rid": rid},
+            )
+        return PendingRequest(
+            rid=rid, outs=outs, plan=plan, slots=slots, t0_ns=t0_ns
+        )
 
     def _reserve_slot(self, w: int) -> int:
         """Claim a free slab slot on worker ``w`` (bounded wait, no client
@@ -578,12 +672,16 @@ class GraphClient:
             )
         with self._state_lock:
             self._inflight[w] += 1
+            if self._m_slab is not None:
+                self._m_slab.set(sum(self._inflight))
             return self._free_slots[w].pop()
 
     def _release_slot(self, w: int, slot: int) -> None:
         with self._state_lock:
             self._free_slots[w].append(slot)
             self._inflight[w] -= 1
+            if self._m_slab is not None:
+                self._m_slab.set(sum(self._inflight))
         self._slot_sems[w].release()
 
     def gather(self, pending: PendingRequest) -> List[np.ndarray]:
@@ -600,20 +698,36 @@ class GraphClient:
         (``EngineWorkerError.slot_safe``), and the first error is re-raised
         after the remaining workers are drained.
         """
+        tracer = self._tracer
         first_err: Optional[BaseException] = None
         for w, scatter in pending.plan.items():
             slot = pending.slots[w]
             release = True
             try:
+                w0 = time.perf_counter_ns() if tracer is not None else 0
                 kind, payload = self._wait_reply(w, pending.rid)
-                if pending.qlayout is not None:  # balanced whole-call reply
-                    for out, (n, k), (_, _, r_off) in zip(
-                        pending.outs, pending.qshapes, pending.qlayout
-                    ):
-                        view = shm_lib.slot_view(
-                            self._slabs[w], slot, self.slot_bytes, r_off, (n, k)
-                        )
-                        np.copyto(out, view, casting="unsafe")
+                if tracer is not None:
+                    now = time.perf_counter_ns()
+                    tracer.add_span(
+                        "client.wait", "client", w0, now - w0,
+                        {"rid": pending.rid, "worker": w},
+                    )
+                    c0 = now
+                if kind in ("pickle", "pickleq") and self._m_pickle is not None:
+                    self._m_pickle.inc()
+                if pending.qshapes is not None:  # balanced whole-call reply
+                    if pending.qlayout is not None:  # composed in the slab
+                        for out, (n, k), (_, _, r_off) in zip(
+                            pending.outs, pending.qshapes, pending.qlayout
+                        ):
+                            view = shm_lib.slot_view(
+                                self._slabs[w], slot, self.slot_bytes,
+                                r_off, (n, k),
+                            )
+                            np.copyto(out, view, casting="unsafe")
+                    else:  # "pickleq": caller-order arrays over the pipe
+                        for out, arr in zip(pending.outs, payload):
+                            np.copyto(out, arr, casting="unsafe")
                 elif kind == "shm":
                     shapes = [(len(idx), k) for _, idx, k in scatter]
                     offsets = shm_lib.reply_layout(shapes, self.slot_bytes)
@@ -625,6 +739,12 @@ class GraphClient:
                 else:  # pickle fallback (reply group exceeded a slab slot)
                     for (qi, idx, _), arr in zip(scatter, payload):
                         pending.outs[qi][idx] = arr
+                if tracer is not None:
+                    tracer.add_span(
+                        "client.compose", "client", c0,
+                        time.perf_counter_ns() - c0,
+                        {"rid": pending.rid, "worker": w},
+                    )
             except EngineWorkerError as e:
                 release = e.slot_safe
                 if first_err is None:
@@ -634,6 +754,9 @@ class GraphClient:
                     self._release_slot(w, slot)
         if first_err is not None:
             raise first_err
+        if self._m_round_ns is not None and pending.t0_ns:
+            self._m_round_ns.observe(time.perf_counter_ns() - pending.t0_ns)
+            self._m_rounds_worker.inc()
         return pending.outs
 
     # ----------------------------------------------------------- engine API
@@ -651,7 +774,7 @@ class GraphClient:
         """
         if self._closed:
             raise RuntimeError("GraphClient is shut down")
-        t0 = time.monotonic_ns()
+        t0 = time.perf_counter_ns()
         P = self.num_partitions
         outs: List[np.ndarray] = []
         served = 0
@@ -695,12 +818,19 @@ class GraphClient:
                 subs += 1
             served += len(nodes)
             outs.append(out)
+        dur = time.perf_counter_ns() - t0
         with self._local_lock:
             s = self._local_stats
             s["neighbor_requests"] += served
             s["sub_requests"] += subs
             s["batches"] += 1
-            s["busy_ns"] += time.monotonic_ns() - t0
+            s["busy_ns"] += dur
+        if self._tracer is not None:
+            self._tracer.add_span(
+                "client.local", "client", t0, dur, {"queries": len(queries)}
+            )
+            self._m_round_ns.observe(dur)
+            self._m_rounds_local.inc()
         return outs
 
     def sample_many(
@@ -731,8 +861,48 @@ class GraphClient:
 
     # ---------------------------------------------------------------- stats
     def worker_stats(self) -> List[Dict[str, int]]:
-        """Per-worker counter dicts, fetched across the process boundary."""
-        return self._control("stats")
+        """Per-worker counter dicts, fetched across the process boundary.
+
+        Serial one-worker-at-a-time rounds, each bracketed with local
+        ``perf_counter_ns`` timestamps: when tracing, the worker's reply
+        piggybacks its drained serve-span ring plus its own clock reading,
+        and the client estimates the clock offset as
+        ``worker_clock - (t0 + t1) // 2`` (midpoint of the round trip)
+        before ingesting the spans into the tracer's timeline. Each
+        snapshot is also cached as the worker's last-known stats for
+        ``EngineWorkerError`` context.
+        """
+        out: List[Dict[str, int]] = []
+        for w in range(self.num_workers):
+            t0 = time.perf_counter_ns()
+            snap = self._control_one(w, "stats")
+            t1 = time.perf_counter_ns()
+            spans = snap.pop("spans", None)
+            dropped = snap.pop("dropped_spans", 0)
+            clock = snap.pop("clock_ns", None)
+            self._last_stats[w] = dict(snap)
+            if self._tracer is not None and spans:
+                offset = (clock - (t0 + t1) // 2) if clock is not None else 0
+                self._tracer.ingest(
+                    f"graph-worker-{w}", snap.get("pid", -(w + 1)),
+                    [
+                        (name, "worker", s0, d, {"rid": r})
+                        for name, r, s0, d in spans
+                    ],
+                    offset_ns=offset, dropped=dropped,
+                )
+            out.append(snap)
+        return out
+
+    def drain_worker_spans(self) -> None:
+        """Pull every worker's pending serve spans into the tracer.
+
+        A convenience alias for a tracing-time ``worker_stats`` round —
+        call once before export so spans since the last stats round are
+        not lost. No-op when telemetry is off.
+        """
+        if self._tracer is not None:
+            self.worker_stats()
 
     def aggregate_stats(self) -> Dict[str, float]:
         """Cross-partition totals summed over every worker process.

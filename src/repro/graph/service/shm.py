@@ -191,6 +191,34 @@ def sampleq_layout(
     return out
 
 
+def sampleq_request_layout(
+    shapes: List[Tuple[int, int]], slot_bytes: int
+) -> Optional[List[Tuple[int, int]]]:
+    """Request-region offsets of a "sampleq" slot: one (nodes_offset,
+    order_offset) pair per query — the prefix of :func:`sampleq_layout`
+    without the reply region.
+
+    Used when the *replies* overflow the slot but the request still fits:
+    the client ships the request through the slab as usual and the worker
+    answers with a pickled caller-order reply ("pickleq") instead of
+    forcing the whole call down to owner-dispatch fan-out. Returns None
+    when even the request region does not fit. Computed identically on
+    both sides from the shapes the client already knows, like the other
+    layouts.
+    """
+    offsets: List[Tuple[int, int]] = []
+    offset = 0
+    for n, _ in shapes:
+        a = offset
+        offset += _aligned(n * 4)
+        b = offset
+        offset += _aligned(n * 4)
+        offsets.append((a, b))
+    if offset > slot_bytes:
+        return None
+    return offsets
+
+
 def slot_view(
     seg: shared_memory.SharedMemory,
     slot: int,

@@ -13,18 +13,40 @@ Protocol (one tuple per message, pickled over the pipe):
                                              slot (offsets via reply_layout)
         -> ("ok", rid, ("pickle", [arrays])) fallback when a reply group is
                                              too large for a slab slot
-    ("stats", rid)    -> ("ok", rid, {counter dict})
+    ("sampleq", rid, slot, [meta, ...])
+        -> ("ok", rid, ("shmq", slot))       whole-call caller-order reply
+                                             composed inside the slot
+        -> ("ok", rid, ("pickleq", [arrays])) fallback when the reply region
+                                             overflows the slot (the request
+                                             region still rode in shm)
+    ("stats", rid)    -> ("ok", rid, {counter dict})  when tracing, the dict
+                         additionally carries the drained span ring
+                         ("spans"/"dropped_spans"), "clock_ns" (this
+                         process's perf_counter_ns, for client-side clock
+                         offset correction) and always "pid"
     ("reset", rid)    -> ("ok", rid, None)
     ("shutdown", rid) -> worker replies ("ok", rid, None) and exits
+
+Both serve ops count exactly one of ``shm_replies``/``pickle_replies`` per
+request round, so ``shm_replies + pickle_replies == batches`` holds on
+every path (the conservation invariant tests/test_obs.py pins).
 
 Reply transport: only the tag crosses the pipe on the shm path — the sample
 payload lands in shared memory (int32: CSR indices are int32, so nothing is
 lost), so the client never pays pickle/copy costs proportional to
 batch x num_samples and its reader thread stays off the hot path.
 
-Any per-request failure is reported as ("err", rid, traceback_string) — the
-client re-raises it as ``EngineWorkerError`` — so a bad relation name in one
-query can never wedge the service.
+Any per-request failure is reported as ("err", rid, {"traceback": ...,
+"stats": {...}}) — the client re-raises it as ``EngineWorkerError`` carrying
+the worker id, request id, and the worker's stats snapshot at failure — so a
+bad relation name in one query can never wedge the service, and the crash
+report is actionable without re-running.
+
+Tracing (``trace=True`` at spawn): each serve round appends
+``(op_name, rid, t0_ns, dur_ns)`` to a bounded local ring (plain list +
+counter — this module never imports repro.obs, workers stay numpy-only);
+the "stats" round drains it. Timestamps are this process's
+``perf_counter_ns``; the client corrects them into its own timebase.
 
 Randomness: each sub-request derives ``partition_rng(seed, part_id)`` — the
 same derivation the in-process engine uses — so replies are bitwise
@@ -47,10 +69,11 @@ import numpy as np
 from repro.graph.engine import partition_rng, sample_csr_rows
 from repro.graph.service.shm import (
     ShardManifest, attach_segment, attach_shard, reply_layout, sampleq_layout,
-    slot_view,
+    sampleq_request_layout, slot_view,
 )
 
 _POLL_S = 0.25
+_SPAN_CAP = 8192  # bounded serve-span ring per worker (tracing only)
 
 
 def _parent_alive() -> bool:
@@ -66,6 +89,7 @@ def worker_main(
     conn,
     slab_name: str = "",
     slot_bytes: int = 0,
+    trace: bool = False,
 ) -> None:
     """Entry point of one graph-service worker process."""
     segs = []
@@ -79,6 +103,9 @@ def worker_main(
         "shm_replies": 0,
         "pickle_replies": 0,
     }
+    # serve-span ring: (op_name, rid, t0_ns, dur_ns), drained by "stats"
+    spans: List[tuple] = [None] * _SPAN_CAP if trace else []
+    span_n = 0
     try:
         shards: Dict[int, Dict[str, np.ndarray]] = {}
         for m in manifests:
@@ -148,7 +175,13 @@ def worker_main(
                     else:
                         stats["pickle_replies"] += 1
                         payload = ("pickle", replies)
-                    stats["busy_ns"] += time.perf_counter_ns() - t0
+                    dur = time.perf_counter_ns() - t0
+                    stats["busy_ns"] += dur
+                    if trace:
+                        spans[span_n % _SPAN_CAP] = (
+                            "worker.sample", rid, t0, dur,
+                        )
+                        span_n += 1
                     conn.send(("ok", rid, payload))
                 elif op == "sampleq":
                     # whole-call exchange (balanced dispatch): requests AND
@@ -156,17 +189,31 @@ def worker_main(
                     # client's GIL never touches per-partition scatters
                     t0 = time.perf_counter_ns()
                     slot, metas = msg[2], msg[3]
-                    offsets = sampleq_layout(
-                        [(m[4], m[1]) for m in metas], slot_bytes
-                    )
+                    shapes = [(m[4], m[1]) for m in metas]
+                    offsets = sampleq_layout(shapes, slot_bytes)
+                    if offsets is not None:
+                        req_offs = [(a, b) for a, b, _ in offsets]
+                    else:
+                        # replies overflow the slot but the request region
+                        # rode in shm: sample into fresh arrays and pickle
+                        # the caller-order replies back ("pickleq")
+                        req_offs = sampleq_request_layout(shapes, slot_bytes)
+                    replies = []
                     served = 0
                     num_parts = manifests[0].num_parts
-                    for (relation, k, pad_id, seed, n, starts), (
-                        a_off, b_off, r_off,
-                    ) in zip(metas, offsets):
+                    for qi, (relation, k, pad_id, seed, n, starts) in enumerate(
+                        metas
+                    ):
+                        a_off, b_off = req_offs[qi]
                         nodes = slot_view(slab, slot, slot_bytes, a_off, (n,))
                         order = slot_view(slab, slot, slot_bytes, b_off, (n,))
-                        reply = slot_view(slab, slot, slot_bytes, r_off, (n, k))
+                        if offsets is not None:
+                            reply = slot_view(
+                                slab, slot, slot_bytes, offsets[qi][2], (n, k)
+                            )
+                        else:
+                            reply = np.empty((n, k), dtype=np.int32)
+                            replies.append(reply)
                         for p in range(num_parts):
                             lo, hi = starts[p], starts[p + 1]
                             if lo == hi:
@@ -187,11 +234,35 @@ def worker_main(
                     stats["neighbor_requests"] += served
                     stats["sub_requests"] += len(metas)
                     stats["batches"] += 1
-                    stats["shm_replies"] += 1
-                    stats["busy_ns"] += time.perf_counter_ns() - t0
-                    conn.send(("ok", rid, ("shmq", slot)))
+                    if offsets is not None:
+                        stats["shm_replies"] += 1
+                        payload = ("shmq", slot)
+                    else:
+                        stats["pickle_replies"] += 1
+                        payload = ("pickleq", replies)
+                    dur = time.perf_counter_ns() - t0
+                    stats["busy_ns"] += dur
+                    if trace:
+                        spans[span_n % _SPAN_CAP] = (
+                            "worker.sampleq", rid, t0, dur,
+                        )
+                        span_n += 1
+                    conn.send(("ok", rid, payload))
                 elif op == "stats":
-                    conn.send(("ok", rid, dict(stats)))
+                    snap = dict(stats)
+                    snap["pid"] = os.getpid()
+                    if trace:
+                        if span_n <= _SPAN_CAP:
+                            drained = spans[:span_n]
+                        else:
+                            i = span_n % _SPAN_CAP
+                            drained = spans[i:] + spans[:i]
+                        snap["spans"] = drained
+                        snap["dropped_spans"] = max(0, span_n - _SPAN_CAP)
+                        snap["clock_ns"] = time.perf_counter_ns()
+                        spans = [None] * _SPAN_CAP
+                        span_n = 0
+                    conn.send(("ok", rid, snap))
                 elif op == "reset":
                     for key in (
                         "neighbor_requests", "sub_requests", "batches",
@@ -202,7 +273,10 @@ def worker_main(
                 else:
                     conn.send(("err", rid, f"unknown op {op!r}"))
             except Exception:
-                conn.send(("err", rid, traceback.format_exc()))
+                conn.send(("err", rid, {
+                    "traceback": traceback.format_exc(),
+                    "stats": dict(stats),
+                }))
     except (EOFError, BrokenPipeError, KeyboardInterrupt):
         pass
     finally:

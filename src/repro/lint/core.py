@@ -264,6 +264,7 @@ def all_rules() -> List[Rule]:
         rules_determinism,
         rules_hostsync,
         rules_lifecycle,
+        rules_obs,
         rules_pallas,
     )
 
@@ -272,6 +273,7 @@ def all_rules() -> List[Rule]:
         + list(rules_hostsync.RULES)
         + list(rules_pallas.RULES)
         + list(rules_lifecycle.RULES)
+        + list(rules_obs.RULES)
     )
 
 

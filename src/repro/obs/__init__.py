@@ -1,0 +1,71 @@
+"""repro.obs — unified telemetry: span tracing, metrics, Perfetto export.
+
+The diagnostic substrate for the multi-process pipeline (the ROADMAP's
+multi-host and serving tentpoles stand on it): one :class:`Telemetry`
+bundle carries a ring-buffered cross-process span :class:`Tracer` and a
+:class:`MetricsRegistry`, threaded explicitly — never a global — through
+``TrainerConfig.telemetry`` into the trainer loop, the prefetcher, the
+``GraphClient`` request rounds, the graph-service workers (spans ship back
+on the ``stats`` control round, clock-offset-corrected), and retrieval.
+
+Usage (see docs/observability.md for the full tour)::
+
+    from repro.obs import Telemetry
+
+    tel = Telemetry()
+    trainer = Graph4RecTrainer(..., TrainerConfig(..., telemetry=tel))
+    trainer.train(params)
+    tel.write_trace("out.trace.json")   # open in https://ui.perfetto.dev
+    print(tel.text_summary())
+
+Disabled telemetry is ``telemetry=None`` (the default) everywhere: no
+rings are allocated, no events are emitted, and instrumented call sites
+pay one ``is None`` test (``make bench-trace`` pins the overhead).
+"""
+from repro.obs.export import chrome_trace, text_summary, trace_events, write_trace
+from repro.obs.metrics import (
+    DEFAULT_NS_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import DurationRing, Span, Tracer, span_scope
+
+
+class Telemetry:
+    """One tracer + one metrics registry, wired together for export."""
+
+    def __init__(self, span_capacity: int = 16384, process_name: str = "trainer"):
+        self.tracer = Tracer(capacity=span_capacity, process_name=process_name)
+        self.metrics = MetricsRegistry()
+
+    def span(self, name: str, cat: str = "trainer", **args):
+        return self.tracer.span(name, cat=cat, **args)
+
+    def chrome_trace(self) -> dict:
+        return chrome_trace(self.tracer, self.metrics)
+
+    def write_trace(self, path: str) -> str:
+        return write_trace(path, self.tracer, self.metrics)
+
+    def text_summary(self) -> str:
+        return text_summary(self.tracer, self.metrics)
+
+
+__all__ = [
+    "Counter",
+    "DEFAULT_NS_BUCKETS",
+    "DurationRing",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "Telemetry",
+    "Tracer",
+    "chrome_trace",
+    "span_scope",
+    "text_summary",
+    "trace_events",
+    "write_trace",
+]

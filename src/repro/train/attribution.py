@@ -11,8 +11,10 @@ probe the auto backend calibration uses.
 Design constraints (the H001/H002 lint contract):
 
 - **Sync-free on the hot path.** ``PhaseTimer`` records
-  ``time.perf_counter()`` durations into preallocated ring buffers —
-  no device sync, no allocation, no locks per step. The one
+  ``time.perf_counter_ns()`` durations into preallocated ring buffers
+  (``repro.obs.trace.DurationRing`` — the timer is a thin layer over the
+  telemetry subsystem, and optionally mirrors each phase interval as an
+  obs span) — no device sync, no allocation, no locks per step. The one
   ``device_barrier`` lives at the end of the measured window (the trainer
   already drains there), never per step.
 - **Dispatch != execution.** The "dispatch" phase measures enqueue cost
@@ -43,7 +45,7 @@ import threading
 import time
 from typing import Dict, Iterable, Optional
 
-import numpy as np
+from repro.obs.trace import DurationRing, Tracer
 
 PHASES = ("sample", "assemble", "batch_wait", "h2d", "dispatch", "loss_fetch")
 
@@ -52,40 +54,44 @@ class PhaseTimer:
     """Ring-buffered wall-clock attribution of trainer-loop phases.
 
     ``with timer.phase("dispatch"): ...`` appends one duration to the
-    phase's ring buffer. Buffers are fixed-size (``capacity`` per phase);
-    when a run exceeds capacity the retained window is extrapolated by
-    count in :meth:`summary`, so long runs stay O(capacity) memory with
-    no hot-loop branching.
+    phase's ring buffer (an ``obs.trace.DurationRing``). Buffers are
+    fixed-size (``capacity`` per phase); when a run exceeds capacity the
+    retained window is extrapolated by count in :meth:`summary`, so long
+    runs stay O(capacity) memory with no hot-loop branching.
+
+    Rebase note (telemetry PR): the timer is now a thin aggregation layer
+    over ``repro.obs`` — durations land in obs duration rings, and when an
+    optional ``tracer`` is wired each phase interval is additionally
+    emitted as a span, so the attribution phases appear on the Perfetto
+    timeline with per-thread tracks for free. The public API and the
+    ``summary()`` schema (the pinned ``step_attribution`` benchmark
+    format) are unchanged.
     """
 
-    def __init__(self, capacity: int = 8192):
+    def __init__(self, capacity: int = 8192, tracer: Optional[Tracer] = None):
         self._cap = int(capacity)
-        self._dur: Dict[str, np.ndarray] = {
-            p: np.zeros(self._cap, np.float64) for p in PHASES
+        self._dur: Dict[str, DurationRing] = {
+            p: DurationRing(self._cap) for p in PHASES
         }
-        self._n: Dict[str, int] = {p: 0 for p in PHASES}
+        self._tracer = tracer
 
     def add(self, name: str, seconds: float) -> None:
-        i = self._n[name]
-        self._dur[name][i % self._cap] = seconds
-        self._n[name] = i + 1
+        self._dur[name].add(seconds)
 
     @contextlib.contextmanager
     def phase(self, name: str):
-        t0 = time.perf_counter()
+        t0 = time.perf_counter_ns()
         try:
             yield
         finally:
-            self.add(name, time.perf_counter() - t0)
+            dur_ns = time.perf_counter_ns() - t0
+            self._dur[name].add(dur_ns * 1e-9)
+            if self._tracer is not None:
+                self._tracer.add_span(name, "phase", t0, dur_ns)
 
     def total(self, name: str) -> float:
         """Total seconds attributed to ``name`` (ring window extrapolated)."""
-        n = self._n[name]
-        if n == 0:
-            return 0.0
-        kept = min(n, self._cap)
-        s = float(self._dur[name][:kept].sum())
-        return s * (n / kept)
+        return self._dur[name].total()
 
     def summary(
         self, wall_s: Optional[float] = None, steps: Optional[int] = None
@@ -101,7 +107,7 @@ class PhaseTimer:
         """
         phases: Dict[str, Dict] = {}
         for p in PHASES:
-            n = self._n[p]
+            n = self._dur[p].count
             if n == 0:
                 continue
             tot = self.total(p)
@@ -114,7 +120,9 @@ class PhaseTimer:
         if wall_s is not None:
             out["wall_s"] = round(wall_s, 6)
             consumer = ("batch_wait", "h2d", "dispatch", "loss_fetch")
-            host_vis = sum(self.total(p) for p in consumer if self._n[p])
+            host_vis = sum(
+                self.total(p) for p in consumer if self._dur[p].count
+            )
             out["host_visible_s"] = round(host_vis, 6)
             out["device_residual_s"] = round(max(0.0, wall_s - host_vis), 6)
         if steps:

@@ -66,6 +66,7 @@ from repro.lint.sanitizer import (
     host_scalar,
     transfer_sanitizer,
 )
+from repro.obs.trace import span_scope
 from repro.train.attribution import (
     PhaseTimer,
     measure_handoff_overhead,
@@ -212,6 +213,13 @@ class TrainerConfig:
     # ring-buffer PhaseTimer (train/attribution.py). Off by default: zero
     # hot-loop cost beyond a None check.
     attribution: bool = False
+    # Unified telemetry (repro.obs.Telemetry, default None = disabled): span
+    # tracing across the step loop, prefetcher, GraphClient rounds, graph
+    # workers, and retrieval, plus the metrics registry — exported as a
+    # Perfetto-loadable Chrome trace (telemetry.write_trace) or text
+    # summary. Disabled costs one is-None test per instrumented site
+    # (`make bench-trace` pins the overhead at noise level).
+    telemetry: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -239,10 +247,13 @@ class _Prefetcher:
     (hard crash, killed interpreter thread) surfaces as an error instead of
     hanging ``train()`` forever."""
 
-    def __init__(self, it: Iterator, depth: int):
+    def __init__(self, it: Iterator, depth: int, queue_gauge=None):
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(depth)))
         self._err: Optional[BaseException] = None
         self._stop = threading.Event()
+        # optional obs gauge tracking the queue's fill level (a persistently
+        # empty queue = starved consumer, persistently full = device-bound)
+        self._gauge = queue_gauge
         self._thread = threading.Thread(
             target=self._fill, args=(it,), name="repro-prefetch", daemon=True
         )
@@ -254,6 +265,8 @@ class _Prefetcher:
                 while not self._stop.is_set():
                     try:
                         self._q.put(item, timeout=0.1)
+                        if self._gauge is not None:
+                            self._gauge.set(self._q.qsize())
                         break
                     except queue.Full:
                         continue
@@ -350,7 +363,10 @@ def _round_spikes(durs: List[float]) -> List[int]:
 
 
 def _staged_batches(
-    it: Iterator, timer: Optional[PhaseTimer] = None, double_buffer: bool = True
+    it: Iterator,
+    timer: Optional[PhaseTimer] = None,
+    double_buffer: bool = True,
+    staged_gauge=None,
 ) -> Iterator:
     """Consumer-side H2D stager: the one explicit ``jax.device_put`` per
     batch, double-buffered.
@@ -376,6 +392,8 @@ def _staged_batches(
                 return
             with phase_scope(timer, "h2d"):
                 staged = (jax.device_put(item[0]), item[1])
+            if staged_gauge is not None:
+                staged_gauge.set(1)
             yield staged
     with phase_scope(timer, "batch_wait"):
         item = next(it, _DONE)
@@ -387,10 +405,14 @@ def _staged_batches(
         with phase_scope(timer, "batch_wait"):
             item = next(it, _DONE)
         if item is _DONE:
+            if staged_gauge is not None:
+                staged_gauge.set(1)
             yield pending
             return
         with phase_scope(timer, "h2d"):
             staged = (jax.device_put(item[0]), item[1])
+        if staged_gauge is not None:
+            staged_gauge.set(2)  # two device batches resident (double buffer)
         yield pending
         pending = staged
 
@@ -428,6 +450,7 @@ class Graph4RecTrainer:
                     engine,
                     num_workers=self._engine_workers,
                     local_threshold=cfg.engine_local_threshold,
+                    telemetry=cfg.telemetry,
                 )
             else:
                 engine = GraphClient(
@@ -435,6 +458,7 @@ class Graph4RecTrainer:
                     num_partitions=cfg.num_engine_partitions,
                     num_workers=self._engine_workers,
                     local_threshold=cfg.engine_local_threshold,
+                    telemetry=cfg.telemetry,
                 )
             self._owned_client = engine
         elif cfg.engine_backend != "inproc":
@@ -508,6 +532,10 @@ class Graph4RecTrainer:
                     "sampling_backend='fused' ineligible: %s; falling back "
                     "to the host pipeline", why,
                 )
+                if cfg.telemetry is not None:
+                    cfg.telemetry.metrics.counter(
+                        "trainer.fused_fallback"
+                    ).inc()
         elif cfg.sampling_backend not in ("host", "auto"):
             raise ValueError(f"unknown sampling_backend {cfg.sampling_backend!r}")
         self._grad_step = jax.jit(self._make_grad_step())
@@ -663,11 +691,14 @@ class Graph4RecTrainer:
         from repro.infer import embed_all_nodes
 
         ds = self.dataset
+        tel = self.cfg.telemetry
+        tracer = tel.tracer if tel is not None else None
         rng = np.random.default_rng(self.cfg.seed + 7)
-        all_emb = embed_all_nodes(
-            params, self.model_cfg, self.engine, ds.graph,
-            batch_size=self.cfg.eval_batch_size, rng=rng,
-        )
+        with span_scope(tracer, "infer.embed_all_nodes", cat="eval"):
+            all_emb = embed_all_nodes(
+                params, self.model_cfg, self.engine, ds.graph,
+                batch_size=self.cfg.eval_batch_size, rng=rng,
+            )
         user_emb = all_emb[: ds.num_users]
         item_emb = all_emb[ds.num_users : ds.num_users + ds.num_items]
         eval_pairs = ds.val_pairs if split == "val" else ds.test_pairs
@@ -675,6 +706,7 @@ class Graph4RecTrainer:
             user_emb, item_emb, self._train_pairs, eval_pairs,
             top_k=self.cfg.eval_top_k, top_n=self.cfg.eval_top_n,
             max_users=self.cfg.eval_max_users, method=self.cfg.eval_method,
+            telemetry=tel,
         )
 
     def _host_batches(
@@ -808,6 +840,10 @@ class Graph4RecTrainer:
                 meas["fused_step_s"] = median(fused_times[1:])
             else:
                 meas["fused_ineligible"] = why
+                if cfg.telemetry is not None:
+                    cfg.telemetry.metrics.counter(
+                        "trainer.fused_fallback"
+                    ).inc()
         return meas
 
     def _resolve_plan(self, params: Dict) -> Dict:
@@ -909,7 +945,17 @@ class Graph4RecTrainer:
         cfg = self.cfg
         params = params if params is not None else self.init_params()
         plan = self._resolve_plan(params)
-        timer = PhaseTimer() if cfg.attribution else None
+        tel = cfg.telemetry
+        tracer = tel.tracer if tel is not None else None
+        # Tracing rides the attribution instrumentation: PhaseTimer with a
+        # tracer emits every phase interval as a span (per-thread tracks in
+        # the exported trace). The pinned TrainResult.attribution summary
+        # stays gated on cfg.attribution alone.
+        timer = (
+            PhaseTimer(tracer=tracer)
+            if (cfg.attribution or tracer is not None)
+            else None
+        )
         use_fused = plan["sampling"] == "fused"
         if use_fused:
             # The fused step donates its param buffers; copy like the
@@ -950,10 +996,20 @@ class Graph4RecTrainer:
                 pipeline, cfg.num_steps, timer
             )
             if depth > 0:
-                prefetcher = _Prefetcher(host_iter, depth)
+                prefetcher = _Prefetcher(
+                    host_iter, depth,
+                    queue_gauge=(
+                        tel.metrics.gauge("prefetch.queue_depth")
+                        if tel is not None else None
+                    ),
+                )
                 host_iter = prefetcher
             batch_iter = _staged_batches(
-                host_iter, timer, double_buffer=depth > 0
+                host_iter, timer, double_buffer=depth > 0,
+                staged_gauge=(
+                    tel.metrics.gauge("stager.device_batches")
+                    if tel is not None else None
+                ),
             )
         t0 = time.perf_counter()
         try:
@@ -1010,10 +1066,15 @@ class Graph4RecTrainer:
         losses.extend(host_floats(loss_hist))
         if cfg.eval_at_end:
             evals.append(self.evaluate(params))
+        if tracer is not None and self._owned_client is not None:
+            # pull worker serve spans recorded since the last stats round
+            # into the tracer before the caller exports the trace
+            self._owned_client.drain_worker_spans()
         return TrainResult(
             params=params, losses=losses, eval_history=evals,
             wall_time_s=wall, pairs_seen=pairs_seen, plan=dict(plan),
             attribution=(
-                timer.summary(wall, steps_done) if timer is not None else None
+                timer.summary(wall, steps_done)
+                if (timer is not None and cfg.attribution) else None
             ),
         )

@@ -326,6 +326,55 @@ class TestLifecycleRules:
         assert got == []
 
 
+# ------------------------------------------------------------ observability
+class TestObservabilityRules:
+    WALLCLOCK = """\
+        import time
+
+        def measure():
+            t0 = time.time()
+            return time.time() - t0
+        """
+
+    def test_o001_wall_clock_in_hot_path(self, tmp_path):
+        got = lint_snippet(
+            tmp_path, "src/repro/train/trainer.py", self.WALLCLOCK
+        )
+        assert rule_ids(got) == ["O001", "O001"]
+
+    def test_o001_fires_across_instrumented_modules(self, tmp_path):
+        # the telemetry layer itself and everything it instruments
+        for rel in ("src/repro/obs/trace.py",
+                    "src/repro/graph/service/worker.py",
+                    "src/repro/core/recall.py"):
+            got = lint_snippet(tmp_path, rel, "import time\nt = time.time()\n")
+            assert rule_ids(got) == ["O001"], rel
+
+    def test_o001_silent_outside_instrumented_modules(self, tmp_path):
+        got = lint_snippet(
+            tmp_path, "src/repro/launch/report.py", self.WALLCLOCK
+        )
+        assert got == []
+
+    def test_o001_monotonic_clocks_clean(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/train/trainer.py", """\
+            import time
+
+            def measure():
+                t0 = time.perf_counter_ns()
+                deadline = time.monotonic() + 5.0
+                return time.perf_counter_ns() - t0, deadline
+            """)
+        assert got == []
+
+    def test_o001_suppressible(self, tmp_path):
+        got = lint_snippet(tmp_path, "src/repro/train/trainer.py", """\
+            import time
+            stamp = time.time()  # repro: lint-ignore[O001]
+            """)
+        assert got == []
+
+
 # ------------------------------------------------- suppression and baseline
 class TestSuppressionAndBaseline:
     def test_inline_suppression(self, tmp_path):
