@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize bench-attr bench-trace
+.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize bench-attr bench-trace bench-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -34,3 +34,8 @@ bench-attr:
 
 bench-trace:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --telemetry
+
+# perf-regression gate: fresh quick arms vs the committed BENCH JSONs
+# (direction-aware tolerance bands; exit 1 on non-baselined regressions)
+bench-check:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/regression.py

@@ -674,44 +674,71 @@ def telemetry_bench(quick: bool = True, results: Dict = None) -> None:
     """
     from repro.obs import Telemetry
 
+    from repro.obs import HealthConfig
+    from repro.obs.memory import memory_snapshot
+
     ds = dataset("toy")
     steps = 40 if quick else 120
     out: Dict = {"dataset": "toy", "steps": steps}
     tel = Telemetry()
+    tel_h = Telemetry()
+    # "guarded" = traced + the run-health monitor (watchdog thread, per-step
+    # beats, loss-drain anomaly checks): its overhead is measured against
+    # the traced arm, pinning the guardrails at <=2% on top of tracing.
     trainers = {
-        mode: trainer(
+        "off": trainer(
             ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
-            prefetch_batches=2, telemetry=(tel if mode == "traced" else None),
-        )
-        for mode in ("off", "traced")
+            prefetch_batches=2,
+        ),
+        "traced": trainer(
+            ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
+            prefetch_batches=2, telemetry=tel,
+        ),
+        "guarded": trainer(
+            ds, steps=steps, eval_at_end=False, gnn_type="lightgcn",
+            prefetch_batches=2, telemetry=tel_h,
+            health=HealthConfig(worker_heartbeat_s=0.0),
+        ),
     }
     for tr in trainers.values():
         tr.train()  # compile + warm
     best: Dict[str, float] = {}
-    for _ in range(3):  # interleaved: both arms see the same machine
+    for _ in range(3):  # interleaved: all arms see the same machine
         for mode, tr in trainers.items():
             res = tr.train()
             best[mode] = min(best.get(mode, 1e9), res.wall_time_s)
     overhead = best["traced"] / best["off"]
+    overhead_health = best["guarded"] / best["traced"]
     events = len(tel.chrome_trace()["traceEvents"])
-    for mode in ("off", "traced"):
+    for mode in trainers:
         emit(
             f"telemetry/{mode}", best[mode] / steps * 1e6,
             f"pairs_per_sec={steps * tr.pipe_cfg.batch_pairs / best[mode]:.0f}",
         )
     emit("telemetry/overhead", 0.0,
          f"overhead={overhead:.3f}x trace_events={events}")
+    emit("telemetry/overhead_health", 0.0,
+         f"overhead={overhead_health:.3f}x vs traced")
     if results is not None:
         results["telemetry"] = {
             "wall_s_off": round(best["off"], 4),
             "wall_s_traced": round(best["traced"], 4),
+            "wall_s_guarded": round(best["guarded"], 4),
             "overhead": round(overhead, 4),
+            "overhead_health": round(overhead_health, 4),
             "pairs_per_sec_off": round(
                 steps * tr.pipe_cfg.batch_pairs / best["off"], 1),
             "pairs_per_sec_traced": round(
                 steps * tr.pipe_cfg.batch_pairs / best["traced"], 1),
             "trace_events": events,
         }
+        # device-memory accounting: the guarded run's per-phase live-array
+        # peaks plus a process-level snapshot (allocator stats are empty on
+        # the CPU backend; populated on real accelerators)
+        mem = trainers["guarded"]._memory
+        results["memory"] = (
+            mem.summary() if mem is not None else memory_snapshot()
+        )
 
 
 def kernel_micro(quick: bool = True, results: Dict = None) -> None:

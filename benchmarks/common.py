@@ -56,6 +56,7 @@ def trainer(
     sanitize_transfers: bool = True,
     attribution: bool = False,
     telemetry=None,
+    health=None,
 ) -> Graph4RecTrainer:
     g = ds.graph
     slots = (
@@ -106,7 +107,8 @@ def trainer(
                       sampling_backend=sampling_backend,
                       sanitize_transfers=sanitize_transfers,
                       attribution=attribution,
-                      telemetry=telemetry),
+                      telemetry=telemetry,
+                      health=health),
     )
 
 

@@ -1,0 +1,263 @@
+"""Perf-regression gate: fresh quick-arm run vs the committed BENCH numbers.
+
+The three end-to-end regressions fixed in PR 7 sat unnoticed for four PRs
+because nothing *watched* the committed benchmark JSONs. This gate does:
+
+    make bench-check            # run fresh quick arms, compare, exit 0/1
+    python benchmarks/regression.py --compare fresh.json   # pure compare
+
+Mechanics:
+
+- A fresh quick run of the cheap arms (``--arms step,recall`` by default:
+  ``pipeline_throughput`` and ``retrieval_bench``) lands in an in-memory
+  dict — the committed ``BENCH_throughput.json`` / ``BENCH_recall.json``
+  are never rewritten by the gate.
+- Both sides are flattened to dotted metric paths and compared over the
+  *intersection* (the committed files hold sections the quick arms don't
+  produce; those are out of scope for the gate, their pins live in
+  ``tests/test_attribution.py``).
+- Every leaf is classified **direction-aware** by its name: throughput-
+  like metrics (``*qps``, ``pairs_per_sec*``, ``speedup*``, ``recall*``,
+  ``steps_per_sec*``, ``saturation``) regress by going *down*;
+  latency/time-like metrics (``*_us``/``*_ms``/``*_s``/``*_ns``,
+  ``wall_*``, ``overhead``) regress by going *up*. Config and count
+  leaves (``steps``, ``nlist``, ``*_bytes``, ...) are ignored. Moving in
+  the *good* direction is never a finding.
+- Tolerance bands are relative and deliberately generous (default
+  ``--tolerance 0.5``): quick arms on shared hosts are noisy, and the
+  gate exists to catch the 2x cliffs that previously shipped, not 5%
+  drift. Determinism-grade metrics (``ivf_recall_at_k``) get a tighter
+  band via ``TOLERANCE_OVERRIDES``.
+- Findings are fingerprinted (``direction:metric-path`` — value-free, so
+  a baseline survives re-measurement) against ``bench_baseline.json``,
+  the same accept-current-state mechanism as ``lint_baseline.json``:
+  ``--write-baseline`` accepts today's findings, the committed baseline
+  stays empty, and CI runs the gate report-only on PRs / enforced on main
+  (``.github/workflows/ci.yml``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_BASELINE_PATH = os.path.join(_ROOT, "bench_baseline.json")
+_COMMITTED = ("BENCH_throughput.json", "BENCH_recall.json")
+
+HIGHER_BETTER = "higher-better"
+LOWER_BETTER = "lower-better"
+
+# Leaf-name classification, first match wins. Ignores come first so that
+# e.g. `chunked_temp_bytes` never falls through to the `*_s` timing rule.
+_IGNORE = re.compile(
+    r"(^quick$|^dataset$|^steps$|^count$|^dim$|^k$|^reps$|^prefetch$"
+    r"|^num_|^workers$|^partitions$|^batch_nodes$|^driver_threads$"
+    r"|^item_chunk$|^auto_plan_prefetch$|nlist|nprobe|_bytes$|^memory"
+    r"|^trace_events$|^frac_of_wall$|_items$|_rounds$|^engine_backend$"
+    r"|^sampling$)"
+)
+_HIGHER = re.compile(
+    r"(qps$|^pairs_per_sec|^speedup|speedup_median|^recall|_recall_at_k$"
+    r"|^steps_per_sec|^saturation$|^device_speedup)"
+)
+_LOWER = re.compile(
+    r"(_us$|_ms$|_ns$|_s$|^overhead$|^wall_|latency|^per_call_us$)"
+)
+
+# metric-path regex -> relative tolerance (checked before the default)
+TOLERANCE_OVERRIDES: Tuple[Tuple[str, float], ...] = (
+    (r"ivf_recall_at_k$", 0.10),  # seeded k-means: near-deterministic
+)
+DEFAULT_TOLERANCE = 0.5
+
+
+def classify(leaf: str) -> Optional[str]:
+    """Direction of a metric leaf name, or None for config/count leaves."""
+    if _IGNORE.search(leaf):
+        return None
+    if _HIGHER.search(leaf):
+        return HIGHER_BETTER
+    if _LOWER.search(leaf):
+        return LOWER_BETTER
+    return None
+
+
+def flatten(obj, prefix: str = "") -> Dict[str, float]:
+    """Numeric leaves of a nested benchmark dict as dotted paths."""
+    out: Dict[str, float] = {}
+    if isinstance(obj, dict):
+        for key, val in obj.items():
+            path = f"{prefix}.{key}" if prefix else str(key)
+            out.update(flatten(val, path))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+    return out
+
+
+def tolerance_for(path: str, default: float = DEFAULT_TOLERANCE) -> float:
+    for pat, tol in TOLERANCE_OVERRIDES:
+        if re.search(pat, path):
+            return tol
+    return default
+
+
+def compare(
+    committed: Dict, fresh: Dict, tolerance: float = DEFAULT_TOLERANCE
+) -> List[Dict]:
+    """Direction-aware findings over the metric intersection.
+
+    A finding means: the fresh value moved in the *bad* direction by more
+    than the band — ``fresh < committed*(1-tol)`` for higher-better,
+    ``fresh > committed*(1+tol)`` for lower-better.
+    """
+    ref = flatten(committed)
+    cur = flatten(fresh)
+    findings: List[Dict] = []
+    for path in sorted(set(ref) & set(cur)):
+        direction = classify(path.rsplit(".", 1)[-1])
+        if direction is None:
+            continue
+        want, got = ref[path], cur[path]
+        tol = tolerance_for(path, tolerance)
+        if want == 0:
+            continue  # ratio undefined; ratio-pin metrics are never 0
+        bad = (
+            got < want * (1.0 - tol)
+            if direction == HIGHER_BETTER
+            else got > want * (1.0 + tol)
+        )
+        if bad:
+            worse = "fell" if direction == HIGHER_BETTER else "rose"
+            findings.append({
+                "metric": path,
+                "direction": direction,
+                "committed": want,
+                "fresh": got,
+                "ratio": round(got / want, 4),
+                "tolerance": tol,
+                "message": (
+                    f"{path} ({direction}) {worse} beyond the {tol:.0%} "
+                    f"band: committed {want:g} -> fresh {got:g} "
+                    f"({got / want:.2f}x)"
+                ),
+            })
+    return findings
+
+
+def fingerprint(finding: Dict) -> str:
+    """Value-free identity: survives re-measurement, dies on recovery."""
+    return f"{finding['direction']}:{finding['metric']}"
+
+
+def load_baseline(path: str = _BASELINE_PATH) -> set:
+    if not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        data = json.load(f)
+    return set(data.get("findings", []))
+
+
+def write_baseline(findings: List[Dict], path: str = _BASELINE_PATH) -> None:
+    payload = {
+        "findings": sorted({fingerprint(f) for f in findings}),
+        "version": 1,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+
+def run_fresh_arms(arms: List[str], quick: bool = True) -> Dict:
+    """Run the requested quick arms into a private dict (never the
+    committed JSONs — this is a measurement, not a refresh)."""
+    results: Dict = {}
+    if "step" in arms:
+        from bench_throughput import pipeline_throughput
+
+        pipeline_throughput(quick, results)
+    if "recall" in arms:
+        from bench_recall import retrieval_bench
+
+        retrieval_bench(quick, results)
+    return results
+
+
+def load_committed(paths) -> Dict:
+    merged: Dict = {}
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(_ROOT, p)
+        if os.path.exists(full):
+            with open(full) as f:
+                merged.update(json.load(f))
+    return merged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arms", default="step,recall",
+                    help="comma list of fresh quick arms: step,recall")
+    ap.add_argument("--compare", metavar="FRESH.json", default=None,
+                    help="compare this results JSON instead of running arms")
+    ap.add_argument("--against", default=",".join(_COMMITTED),
+                    help="comma list of committed benchmark JSONs")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="default relative tolerance band (0.5 = 50%%)")
+    ap.add_argument("--baseline", default=_BASELINE_PATH)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings into the baseline")
+    ap.add_argument("--json", metavar="OUT.json", default=None,
+                    help="write the full report (fresh values + findings)")
+    args = ap.parse_args(argv)
+
+    committed = load_committed(args.against.split(","))
+    if not committed:
+        print(f"bench-check: no committed benchmarks at {args.against}")
+        return 2
+    if args.compare:
+        with open(args.compare) as f:
+            fresh = json.load(f)
+    else:
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        fresh = run_fresh_arms([a.strip() for a in args.arms.split(",") if a])
+
+    findings = compare(committed, fresh, tolerance=args.tolerance)
+    compared = sorted(
+        p for p in (set(flatten(committed)) & set(flatten(fresh)))
+        if classify(p.rsplit(".", 1)[-1]) is not None
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"fresh": fresh, "findings": findings,
+                       "compared": compared}, f, indent=1)
+            f.write("\n")
+    if args.write_baseline:
+        write_baseline(findings, args.baseline)
+        print(f"bench-check: baseline written ({len(findings)} findings)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new = [f for f in findings if fingerprint(f) not in baseline]
+    old = len(findings) - len(new)
+    print(
+        f"bench-check: {len(compared)} direction-aware metrics compared, "
+        f"{len(findings)} findings ({old} baselined)"
+    )
+    for f in new:
+        print(f"  REGRESSION {f['message']}")
+    if new:
+        print(
+            "bench-check: FAIL — re-measure on an idle host; if the new "
+            "numbers are real and intended, refresh the committed BENCH "
+            "JSONs (or --write-baseline to accept temporarily)"
+        )
+        return 1
+    print("bench-check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -71,6 +71,15 @@ def main() -> None:
                          "write a Perfetto-loadable Chrome trace here after "
                          "training; also prints the metrics/span text "
                          "summary (docs/observability.md)")
+    ap.add_argument("--health", action="store_true",
+                    help="enable the run-health guardrails (repro.obs.health):"
+                         " a watchdog thread that flight-records and fails "
+                         "the run on stalls, NaN/diverging losses, and "
+                         "silent graph workers (dumps land under flightrec/)")
+    ap.add_argument("--stall-timeout", type=float, default=120.0,
+                    help="--health: no completed step for this many seconds "
+                         "-> flight-record dump + RunStalledError (size it "
+                         "above the first step's compile time)")
     ap.add_argument("--warm-start", default=None, help="npz of pre-trained tables")
     ap.add_argument("--save", default=None)
     ap.add_argument("--eval-recall", default="device",
@@ -136,6 +145,11 @@ def main() -> None:
         from repro.obs import Telemetry
 
         telemetry = Telemetry()
+    health = None
+    if args.health:
+        from repro.obs import HealthConfig
+
+        health = HealthConfig(stall_timeout_s=args.stall_timeout)
     trainer = Graph4RecTrainer(
         ds, engine, model_cfg, pipe_cfg,
         TrainerConfig(num_steps=args.steps, sparse_lr=1.0, log_every=50,
@@ -149,7 +163,8 @@ def main() -> None:
                       attribution=args.attribution,
                       eval_method=args.eval_recall,
                       eval_max_users=args.eval_max_users,
-                      telemetry=telemetry),
+                      telemetry=telemetry,
+                      health=health),
     )
     params = trainer.init_params()
     if args.warm_start:

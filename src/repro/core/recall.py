@@ -123,10 +123,34 @@ def _make_searchers(
     elif method == "ivf":
         cfg = ivf or IVFConfig()
         idx = {"item": IVFIndex.build(ie, cfg), "user": IVFIndex.build(ue, cfg)}
-        searchers = {
-            name: (lambda ix: lambda q, k, ex=None: ix.search(q, k, exclude=ex))(ix)
-            for name, ix in idx.items()
-        }
+        if telemetry is not None:
+            # introspection counters: why IVF recall/latency is what it is
+            # (cells probed x list width = candidates actually scored;
+            # spill events = items only findable via their 2nd-best cell)
+            m = telemetry.metrics
+            m.counter("ivf.spill_events").inc(
+                sum(ix.spilled_items for ix in idx.values())
+            )
+            c_cells = m.counter("ivf.cells_probed")
+            c_cand = m.counter("ivf.candidates_scored")
+
+            def make_counted(ix):
+                nprobe = min(ix.config.nprobe, ix.config.nlist)
+                per_q = ix.candidates_per_query
+
+                def search(q, k, ex=None):
+                    c_cells.inc(len(q) * nprobe)
+                    c_cand.inc(len(q) * per_q)
+                    return ix.search(q, k, exclude=ex)
+
+                return search
+
+            searchers = {name: make_counted(ix) for name, ix in idx.items()}
+        else:
+            searchers = {
+                name: (lambda ix: lambda q, k, ex=None: ix.search(q, k, exclude=ex))(ix)
+                for name, ix in idx.items()
+            }
     else:
         raise ValueError(f"unknown recall method {method!r}")
     if telemetry is not None:

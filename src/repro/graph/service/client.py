@@ -259,6 +259,9 @@ class GraphClient:
         # last stats snapshot seen per worker (control rounds + err payloads):
         # attached to EngineWorkerError when a worker dies or times out
         self._last_stats: Dict[int, Dict] = {}
+        # heartbeat rounds a worker never answered: their late replies are
+        # swept from the inbox on the next heartbeat instead of leaking
+        self._stale_hb: set = set()
 
         # Everything allocated below (shm segments, worker processes) is
         # reaped if ANY construction step fails — a failed __init__ must not
@@ -877,22 +880,86 @@ class GraphClient:
             t0 = time.perf_counter_ns()
             snap = self._control_one(w, "stats")
             t1 = time.perf_counter_ns()
-            spans = snap.pop("spans", None)
-            dropped = snap.pop("dropped_spans", 0)
-            clock = snap.pop("clock_ns", None)
-            self._last_stats[w] = dict(snap)
-            if self._tracer is not None and spans:
-                offset = (clock - (t0 + t1) // 2) if clock is not None else 0
-                self._tracer.ingest(
-                    f"graph-worker-{w}", snap.get("pid", -(w + 1)),
-                    [
-                        (name, "worker", s0, d, {"rid": r})
-                        for name, r, s0, d in spans
-                    ],
-                    offset_ns=offset, dropped=dropped,
-                )
-            out.append(snap)
+            out.append(self._absorb_stats(w, snap, t0, t1))
         return out
+
+    def _absorb_stats(self, w: int, snap: Dict, t0: int, t1: int) -> Dict:
+        """Fold one stats reply in: strip the piggybacked trace payload
+        (span ingest with the round-trip-midpoint clock offset) and cache
+        the snapshot as the worker's last-known stats."""
+        spans = snap.pop("spans", None)
+        dropped = snap.pop("dropped_spans", 0)
+        clock = snap.pop("clock_ns", None)
+        self._last_stats[w] = dict(snap)
+        if self._tracer is not None and spans:
+            offset = (clock - (t0 + t1) // 2) if clock is not None else 0
+            self._tracer.ingest(
+                f"graph-worker-{w}", snap.get("pid", -(w + 1)),
+                [
+                    (name, "worker", s0, d, {"rid": r})
+                    for name, r, s0, d in spans
+                ],
+                offset_ns=offset, dropped=dropped,
+            )
+        return snap
+
+    def heartbeat(self, timeout: float = 5.0) -> Dict[int, bool]:
+        """Bounded per-worker liveness probe on the ``stats`` control round.
+
+        The health monitor's worker-liveness vehicle (no new IPC op):
+        unlike :meth:`worker_stats`, a silent worker neither raises nor
+        blocks for ``request_timeout`` — each worker gets ``timeout``
+        seconds and a miss is reported as ``False``. The missed round's
+        rid is remembered and its late reply (if the worker was merely
+        slow) is swept from the inbox on the next heartbeat, so repeated
+        probes never leak inbox entries. A responsive reply is absorbed
+        exactly like a stats round (span ingest + last-stats cache), so
+        heartbeats double as periodic trace drains.
+        """
+        if self._closed:
+            return {}
+        with self._cv:
+            for key in [k for k in self._stale_hb if k in self._inbox]:
+                self._inbox.pop(key)
+                self._stale_hb.discard(key)
+        alive: Dict[int, bool] = {}
+        for w in range(self.num_workers):
+            with self._cv:
+                if w in self._dead:
+                    alive[w] = False
+                    continue
+            t0 = time.perf_counter_ns()
+            try:
+                with self._lock:
+                    rid = self._rid = self._rid + 1
+                    self._send(w, ("stats", rid))
+            except EngineWorkerError:
+                alive[w] = False
+                continue
+            deadline = time.monotonic() + timeout
+            reply = None
+            with self._cv:
+                while True:
+                    if (w, rid) in self._inbox:
+                        tag, payload = self._inbox.pop((w, rid))
+                        if tag == "ok":
+                            reply = payload
+                        break
+                    if (
+                        w in self._dead
+                        or self._closed
+                        or time.monotonic() >= deadline
+                    ):
+                        break
+                    self._cv.wait(timeout=0.1)
+            t1 = time.perf_counter_ns()
+            if reply is None:
+                self._stale_hb.add((w, rid))
+                alive[w] = False
+            else:
+                self._absorb_stats(w, reply, t0, t1)
+                alive[w] = True
+        return alive
 
     def drain_worker_spans(self) -> None:
         """Pull every worker's pending serve spans into the tracer.

@@ -24,14 +24,16 @@ from typing import List
 from repro.lint.core import HOT_PATH_GLOBS, Finding, LintModule, Rule, call_name
 
 # The hot-path modules plus everything the telemetry layer touches: the obs
-# package itself, the attribution timer it backs, and the instrumented
-# sampling/retrieval call sites.
+# package itself (health watchdog included — its stall deadlines MUST be
+# monotonic), the attribution timer it backs, and the instrumented
+# sampling/retrieval/serving call sites.
 INSTRUMENTED_GLOBS = HOT_PATH_GLOBS + (
     "src/repro/obs/*.py",
     "src/repro/train/attribution.py",
     "src/repro/sampling/*.py",
     "src/repro/retrieval/*.py",
     "src/repro/core/recall.py",
+    "src/repro/serve/*.py",
 )
 
 

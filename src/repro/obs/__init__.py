@@ -30,6 +30,18 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
 )
+from repro.obs.health import (
+    HealthConfig,
+    HealthMonitor,
+    LossAnomalyError,
+    RunStalledError,
+)
+from repro.obs.memory import (
+    MemoryAccountant,
+    device_memory_stats,
+    live_array_bytes,
+    memory_snapshot,
+)
 from repro.obs.trace import DurationRing, Span, Tracer, span_scope
 
 
@@ -58,12 +70,20 @@ __all__ = [
     "DEFAULT_NS_BUCKETS",
     "DurationRing",
     "Gauge",
+    "HealthConfig",
+    "HealthMonitor",
     "Histogram",
+    "LossAnomalyError",
+    "MemoryAccountant",
     "MetricsRegistry",
+    "RunStalledError",
     "Span",
     "Telemetry",
     "Tracer",
     "chrome_trace",
+    "device_memory_stats",
+    "live_array_bytes",
+    "memory_snapshot",
     "span_scope",
     "text_summary",
     "trace_events",

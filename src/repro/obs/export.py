@@ -49,6 +49,16 @@ def trace_events(tracer: Tracer) -> List[Dict]:
             if args:
                 ev["args"] = args
             events.append(ev)
+    # instant ("i") events: warning-path marks, drawn process-wide so a
+    # degraded run is visible at any zoom level
+    for name, cat, t0, args in tracer.marks():
+        ev = {
+            "ph": "i", "s": "p", "pid": tracer.pid, "tid": 0,
+            "name": name, "cat": cat, "ts": t0 / 1e3,
+        }
+        if args:
+            ev["args"] = args
+        events.append(ev)
     for process_name, pid, spans, _dropped in tracer.foreign():
         events.append(_meta(pid, 0, "process_name", process_name))
         events.append(_meta(pid, 1, "thread_name", "serve"))

@@ -114,6 +114,9 @@ class Tracer:
         self._rings: List[_SpanRing] = []
         # ingested remote spans: (process label, pid, spans, dropped count)
         self._foreign: List[Tuple[str, int, List[Span], int]] = []
+        # instant marks (rare, warning-path events); bounded, locked
+        self._marks: List[Tuple[str, str, int, Optional[Dict]]] = []
+        self._marks_cap = 1024
 
     def _ring(self) -> _SpanRing:
         ring = getattr(self._local, "ring", None)
@@ -145,6 +148,23 @@ class Tracer:
             self._ring().add(
                 (name, cat, t0, time.perf_counter_ns() - t0, args or None)
             )
+
+    def mark(self, name: str, cat: str = "mark", **args) -> None:
+        """Record an instant event — a degraded-mode flag on the timeline.
+
+        Marks are for rare warning-path conditions (wedged prefetch
+        producer, fused fallback, degraded worker): they take the tracer
+        lock and are capacity-bounded, so they must never sit on a
+        per-step path — that is what spans and counters are for.
+        """
+        t0 = time.perf_counter_ns()
+        with self._lock:
+            if len(self._marks) < self._marks_cap:
+                self._marks.append((name, cat, t0, args or None))
+
+    def marks(self) -> List[Tuple[str, str, int, Optional[Dict]]]:
+        with self._lock:
+            return list(self._marks)
 
     def ingest(
         self,

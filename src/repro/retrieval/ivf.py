@@ -113,6 +113,11 @@ class IVFIndex:
     centroids: np.ndarray  # (nlist, d) float32
     lists: np.ndarray  # (nlist, max_len) int32, -1 padded
     items: np.ndarray  # (I, d) float32 — the indexed table
+    # items moved off their argmax cell by hot-cell balancing at build
+    # time: the recall-vs-balance price the BENCH_recall ANN-rebuild item
+    # needs to see (each spilled item is findable only via its second-best
+    # cell, exactly the population nprobe misses first)
+    spilled_items: int = 0
 
     @classmethod
     def build(cls, items: np.ndarray, config: IVFConfig = IVFConfig()) -> "IVFIndex":
@@ -142,9 +147,12 @@ class IVFIndex:
         assign = np.empty(I, dtype=np.int64)
         for lo in range(0, I, step):
             assign[lo : lo + step] = np.argmax(norm[lo : lo + step] @ cent.T, axis=1)
+        spilled = 0
         if config.balance_factor:
             cap = max(1, int(np.ceil(config.balance_factor * I / nlist)))
+            before = assign
             assign = _spill_hot_cells(norm, cent, assign, cap)
+            spilled = int((assign != before).sum())
         counts = np.bincount(assign, minlength=nlist)
         max_len = max(1, int(counts.max()))
         lists = np.full((nlist, max_len), -1, dtype=np.int32)
@@ -153,7 +161,7 @@ class IVFIndex:
             lists[c, : len(members)] = members
         return cls(
             config=dataclasses.replace(config, nlist=nlist),
-            centroids=cent, lists=lists, items=it,
+            centroids=cent, lists=lists, items=it, spilled_items=spilled,
         )
 
     @property

@@ -106,18 +106,32 @@ def fused_eligibility(
     value_slots: Sequence[emb.SlotSpec] = (),
     bag_slots: Sequence[emb.SlotSpec] = (),
     fused: FusedConfig = FusedConfig(),
+    measured_bytes: Optional[int] = None,
 ) -> Tuple[bool, str]:
-    """(eligible?, human-readable reason) for the memory-based gate."""
-    need = fused_device_bytes(
-        graph, config, value_slots, bag_slots, max_degree=fused.max_degree
-    )
+    """(eligible?, human-readable reason) for the memory-based gate.
+
+    Without ``measured_bytes`` the gate runs on the shape-derived
+    *estimate* (``fused_device_bytes`` — nothing is resident yet). Once a
+    sampler exists, callers re-check with ``measured_bytes=
+    sampler.device_table_bytes()`` — the actual footprint of the arrays
+    ``jax.device_put`` shipped — so the logged budget decision names
+    measured bytes, not predicted ones (the trainer does this in
+    ``_build_fused``).
+    """
+    if measured_bytes is not None:
+        need, kind = int(measured_bytes), "measured"
+    else:
+        need = fused_device_bytes(
+            graph, config, value_slots, bag_slots, max_degree=fused.max_degree
+        )
+        kind = "estimated"
     budget = int(fused.budget_mb * (1 << 20))
     if need > budget:
         return False, (
             f"padded device tables need {need / (1 << 20):.1f} MiB "
-            f"> budget {fused.budget_mb:.1f} MiB"
+            f"({kind}) > budget {fused.budget_mb:.1f} MiB"
         )
-    return True, f"device tables fit: {need / (1 << 20):.1f} MiB"
+    return True, f"device tables fit: {need / (1 << 20):.1f} MiB ({kind})"
 
 
 class FusedSampler:
@@ -228,6 +242,21 @@ class FusedSampler:
                     )
                     for s in self.bag_slots
                 }
+
+    def device_table_bytes(self) -> int:
+        """Measured footprint of the resident device tables.
+
+        Sums ``.nbytes`` of every array the constructor shipped with
+        ``jax.device_put`` — what ``fused_eligibility(measured_bytes=...)``
+        gates on once the sampler exists, replacing the shape-derived
+        estimate with ground truth.
+        """
+        tables = [
+            self._adj, self._deg, self._sched, self._start_lo,
+            self._start_cnt, self._spos, self._dpos,
+            *self._slot_pad.values(), *self._bag_counts.values(),
+        ]
+        return int(sum(int(t.nbytes) for t in tables))
 
     # ------------------------------------------------------------- stages
     def _slot_values(self, ids: jnp.ndarray) -> Optional[Dict[str, jnp.ndarray]]:

@@ -9,10 +9,19 @@ temperature sampling.
 This is deliberately the simplest production-shaped server: the dry-run's
 ``decode_32k``/``long_500k`` shapes are exactly one step of this loop at
 pod scale.
+
+Telemetry (optional, same convention as the trainer: ``telemetry=None``
+disables everything at one is-None test per site): each fixed-size batch
+becomes a ``serve.batch`` span, ``serve.queue_depth`` gauges the requests
+still waiting when a batch launches (its high-water mark is the burst
+depth), and ``serve.request_ns`` is the per-request latency histogram —
+every request in a batch observes the batch's wall time, queueing
+included, which is what a caller actually waited.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -21,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ArchSpec
 from repro.models import transformer as T
+from repro.obs.trace import span_scope
 
 
 @dataclasses.dataclass
@@ -34,7 +44,9 @@ class ServeConfig:
 
 
 class BatchedServer:
-    def __init__(self, spec: ArchSpec, params, cfg: ServeConfig):
+    def __init__(
+        self, spec: ArchSpec, params, cfg: ServeConfig, telemetry=None
+    ):
         assert spec.kind in ("lm", "vlm"), "LM-family archs only"
         self.spec = spec
         self.lm = spec.lm
@@ -44,6 +56,16 @@ class BatchedServer:
             self.cache_len = min(cfg.cache_len, self.lm.sliding_window)
         else:
             self.cache_len = cfg.cache_len
+        self._tracer = telemetry.tracer if telemetry is not None else None
+        if telemetry is not None:
+            m = telemetry.metrics
+            self._m_queue = m.gauge("serve.queue_depth")
+            self._m_request_ns = m.histogram("serve.request_ns")
+            self._m_requests = m.counter("serve.requests")
+        else:
+            self._m_queue = None
+            self._m_request_ns = None
+            self._m_requests = None
         self._step = jax.jit(
             lambda p, c, t: T.decode_step(p, self.lm, c, t)
         )
@@ -96,5 +118,24 @@ class BatchedServer:
         out: List[List[int]] = []
         B = self.cfg.batch_size
         for lo in range(0, len(prompts), B):
-            out.extend(self._run_batch(prompts[lo : lo + B]))
+            chunk = prompts[lo : lo + B]
+            if self._m_queue is not None:
+                # requests still waiting behind this batch: the gauge's
+                # high-water mark is the burst depth the server absorbed
+                self._m_queue.set(len(prompts) - lo)
+            t0 = time.perf_counter_ns()
+            with span_scope(
+                self._tracer, "serve.batch", cat="serve",
+                requests=len(chunk), queued=len(prompts) - lo,
+            ):
+                out.extend(self._run_batch(chunk))
+            if self._m_request_ns is not None:
+                # a caller's latency is its batch's wall time (queueing
+                # inside the batch included) — observe once per request
+                dur = time.perf_counter_ns() - t0
+                for _ in chunk:
+                    self._m_request_ns.observe(dur)
+                self._m_requests.inc(len(chunk))
+            if self._m_queue is not None:
+                self._m_queue.set(len(prompts) - lo - len(chunk))
         return out

@@ -68,12 +68,21 @@ class PhaseTimer:
     format) are unchanged.
     """
 
-    def __init__(self, capacity: int = 8192, tracer: Optional[Tracer] = None):
+    def __init__(
+        self,
+        capacity: int = 8192,
+        tracer: Optional[Tracer] = None,
+        pulse=None,
+    ):
         self._cap = int(capacity)
         self._dur: Dict[str, DurationRing] = {
             p: DurationRing(self._cap) for p in PHASES
         }
         self._tracer = tracer
+        # optional sub-step liveness callback (HealthMonitor.pulse): fired
+        # at every phase exit, so the stall watchdog can tell "steps are
+        # slow but phases still move" from "everything froze"
+        self._pulse = pulse
 
     def add(self, name: str, seconds: float) -> None:
         self._dur[name].add(seconds)
@@ -88,6 +97,8 @@ class PhaseTimer:
             self._dur[name].add(dur_ns * 1e-9)
             if self._tracer is not None:
                 self._tracer.add_span(name, "phase", t0, dur_ns)
+            if self._pulse is not None:
+                self._pulse()
 
     def total(self, name: str) -> float:
         """Total seconds attributed to ``name`` (ring window extrapolated)."""

@@ -220,6 +220,16 @@ class TrainerConfig:
     # summary. Disabled costs one is-None test per instrumented site
     # (`make bench-trace` pins the overhead at noise level).
     telemetry: Optional[object] = None
+    # Run-health guardrails (repro.obs.health.HealthConfig, default None =
+    # off): a watchdog thread that flight-records and fails the run on
+    # stalls (no step within stall_timeout_s -> Perfetto snapshot +
+    # all-thread stack dump + worker last-stats under flightrec/, then
+    # RunStalledError), checks the async loss drain for NaN/Inf and EWMA
+    # z-score divergence (no extra host sync), and folds in graph-worker
+    # liveness from bounded heartbeat rounds. Off is a true no-op on the
+    # step loop: losses are bitwise identical either way
+    # (tests/test_health.py pins it).
+    health: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -247,13 +257,31 @@ class _Prefetcher:
     (hard crash, killed interpreter thread) surfaces as an error instead of
     hanging ``train()`` forever."""
 
-    def __init__(self, it: Iterator, depth: int, queue_gauge=None):
+    def __init__(
+        self,
+        it: Iterator,
+        depth: int,
+        queue_gauge=None,
+        telemetry=None,
+        health_check=None,
+    ):
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(depth)))
         self._err: Optional[BaseException] = None
         self._stop = threading.Event()
         # optional obs gauge tracking the queue's fill level (a persistently
         # empty queue = starved consumer, persistently full = device-bound)
         self._gauge = queue_gauge
+        # wedged-producer incidents become a counter + an instant trace
+        # mark (degraded runs visible in Perfetto, not just stderr)
+        self._c_wedged = (
+            telemetry.metrics.counter("prefetch.wedged_producer")
+            if telemetry is not None else None
+        )
+        self._tracer = telemetry.tracer if telemetry is not None else None
+        # optional HealthMonitor.check: a consumer polling an empty queue
+        # still observes a watchdog-armed fault instead of spinning on a
+        # producer that will never deliver
+        self._health_check = health_check
         self._thread = threading.Thread(
             target=self._fill, args=(it,), name="repro-prefetch", daemon=True
         )
@@ -293,6 +321,8 @@ class _Prefetcher:
             try:
                 item = self._q.get(timeout=0.5)
             except queue.Empty:
+                if self._health_check is not None:
+                    self._health_check()
                 if self._thread.is_alive():
                     continue
                 # Producer is gone. It may have enqueued its final batches
@@ -320,6 +350,7 @@ class _Prefetcher:
                         "end-of-stream sentinel; it is a daemon and will "
                         "exit with the process"
                     )
+                    self._mark_wedged("after-sentinel")
                 if self._err is not None:
                     # Same exception object -> original producer traceback.
                     raise self._err
@@ -346,6 +377,13 @@ class _Prefetcher:
                 "prefetch producer still running after close(); it will exit "
                 "after its current sampling round"
             )
+            self._mark_wedged("close")
+
+    def _mark_wedged(self, where: str) -> None:
+        if self._c_wedged is not None:
+            self._c_wedged.inc()
+        if self._tracer is not None:
+            self._tracer.mark("prefetch.wedged_producer", where=where)
 
 
 def _round_spikes(durs: List[float]) -> List[int]:
@@ -522,6 +560,13 @@ class Graph4RecTrainer:
         # warning), lazily by the calibration phase for "auto".
         self._fused_sampler = None
         self._fused_step = None
+        # Measured device-table footprint once a fused sampler was built
+        # (fed back through fused_eligibility; surfaced in the plan).
+        self._fused_measured_bytes: Optional[int] = None
+        # Per-train() observability state (run-health monitor + memory
+        # accountant), kept for tests and post-mortem inspection.
+        self._health_monitor = None
+        self._memory = None
         self._plan: Optional[Dict] = None
         if cfg.sampling_backend == "fused":
             ok, why = self._build_fused()
@@ -536,6 +581,9 @@ class Graph4RecTrainer:
                     cfg.telemetry.metrics.counter(
                         "trainer.fused_fallback"
                     ).inc()
+                    cfg.telemetry.tracer.mark(
+                        "trainer.fused_fallback", reason=why
+                    )
         elif cfg.sampling_backend not in ("host", "auto"):
             raise ValueError(f"unknown sampling_backend {cfg.sampling_backend!r}")
         self._grad_step = jax.jit(self._make_grad_step())
@@ -579,6 +627,23 @@ class Graph4RecTrainer:
                 if bspecs else None
             ),
         )
+        # The estimate admitted us; re-gate on the MEASURED footprint of
+        # the tables the sampler actually shipped, so the logged decision
+        # (and the plan) names real bytes. An estimate that undershot
+        # enough to bust the budget tears the sampler back down.
+        measured = self._fused_sampler.device_table_bytes()
+        self._fused_measured_bytes = measured
+        ok, why = fused_eligibility(
+            self.dataset.graph, self.pipe_cfg, vspecs, bspecs, fused_cfg,
+            measured_bytes=measured,
+        )
+        log.info(
+            "fused eligibility: %s (measured %.1f MiB, budget %.1f MiB)",
+            why, measured / (1 << 20), cfg.fused_budget_mb,
+        )
+        if not ok:
+            self._fused_sampler = None
+            return False, why
         self._fused_step = jax.jit(
             self._make_fused_step(), donate_argnums=(0, 1)
         )
@@ -844,6 +909,9 @@ class Graph4RecTrainer:
                     cfg.telemetry.metrics.counter(
                         "trainer.fused_fallback"
                     ).inc()
+                    cfg.telemetry.tracer.mark(
+                        "trainer.fused_fallback", reason=why
+                    )
         return meas
 
     def _resolve_plan(self, params: Dict) -> Dict:
@@ -887,6 +955,7 @@ class Graph4RecTrainer:
                          f"{cfg.calibrate_min_steps}); legacy defaults"
                 )
             )
+            plan["fused_measured_bytes"] = self._fused_measured_bytes
             self._plan = plan
             return plan
         meas = self._calibrate(params)
@@ -938,6 +1007,7 @@ class Graph4RecTrainer:
                 "cost more than the overlap hides"
             )
         log.info("backend plan: %s", plan["reason"])
+        plan["fused_measured_bytes"] = self._fused_measured_bytes
         self._plan = plan
         return plan
 
@@ -947,13 +1017,38 @@ class Graph4RecTrainer:
         plan = self._resolve_plan(params)
         tel = cfg.telemetry
         tracer = tel.tracer if tel is not None else None
+        # Run-health guardrails (cfg.health = a HealthConfig): the monitor
+        # watches beats/pulses from its own watchdog thread and observes
+        # only already-drained host losses, so enabling it never changes
+        # the training stream. The instance is kept on self for tests and
+        # post-mortems (trainer._health_monitor.fault, .degraded).
+        monitor = None
+        if cfg.health is not None:
+            from repro.obs.health import HealthMonitor
+
+            monitor = HealthMonitor(
+                cfg.health, telemetry=tel, client=self._owned_client
+            )
+        self._health_monitor = monitor
+        # Phase-boundary device-memory accounting (telemetry runs only):
+        # live-array peaks per lifecycle phase, surfaced in the metrics
+        # summary and the bench 'memory' section (trainer._memory).
+        mem = None
+        if tel is not None:
+            from repro.obs.memory import MemoryAccountant
+
+            mem = MemoryAccountant(tel.metrics)
+        self._memory = mem
         # Tracing rides the attribution instrumentation: PhaseTimer with a
         # tracer emits every phase interval as a span (per-thread tracks in
         # the exported trace). The pinned TrainResult.attribution summary
         # stays gated on cfg.attribution alone.
         timer = (
-            PhaseTimer(tracer=tracer)
-            if (cfg.attribution or tracer is not None)
+            PhaseTimer(
+                tracer=tracer,
+                pulse=monitor.pulse if monitor is not None else None,
+            )
+            if (cfg.attribution or tracer is not None or monitor is not None)
             else None
         )
         use_fused = plan["sampling"] == "fused"
@@ -1002,6 +1097,10 @@ class Graph4RecTrainer:
                         tel.metrics.gauge("prefetch.queue_depth")
                         if tel is not None else None
                     ),
+                    telemetry=tel,
+                    health_check=(
+                        monitor.check if monitor is not None else None
+                    ),
                 )
                 host_iter = prefetcher
             batch_iter = _staged_batches(
@@ -1011,7 +1110,13 @@ class Graph4RecTrainer:
                     if tel is not None else None
                 ),
             )
+        if mem is not None:
+            # everything long-lived is resident by now: params, opt state,
+            # engine shards, and (fused runs) the device sampling tables
+            mem.sample("fused" if use_fused else "tables")
         t0 = time.perf_counter()
+        if monitor is not None:
+            monitor.start()
         try:
             for step, (dev, npairs) in enumerate(batch_iter):
                 # Every dispatch runs under the transfer guard: batches were
@@ -1025,9 +1130,13 @@ class Graph4RecTrainer:
                 loss_hist.append(loss)
                 pairs_seen += npairs
                 steps_done += 1
+                if monitor is not None:
+                    monitor.beat(step)
                 if cfg.sync_every_step:
                     with phase_scope(timer, "loss_fetch"):
-                        host_scalar(loss)
+                        v = host_scalar(loss)
+                    if monitor is not None:
+                        monitor.observe_losses((v,))
                 if (
                     cfg.loss_fetch_every
                     and len(loss_hist) >= cfg.loss_fetch_every + drain_tail
@@ -1040,7 +1149,10 @@ class Graph4RecTrainer:
                         # full window of dispatches to complete — near-free)
                         # and start this window's readback without blocking.
                         if pending_drains:
-                            losses.extend(pending_drains.pop(0).resolve())
+                            drained = pending_drains.pop(0).resolve()
+                            losses.extend(drained)
+                            if monitor is not None:
+                                monitor.observe_losses(drained)
                         pending_drains.append(host_floats_async(done))
                 if cfg.log_every and (step + 1) % cfg.log_every == 0:
                     log.info("step %d loss %.4f", step + 1, host_scalar(loss))
@@ -1053,6 +1165,8 @@ class Graph4RecTrainer:
             self.close()
             raise
         finally:
+            if monitor is not None:
+                monitor.stop()
             if prefetcher is not None:
                 prefetcher.close()
         if loss_hist:
@@ -1061,11 +1175,20 @@ class Graph4RecTrainer:
         # Everything is complete past the barrier: resolving the started
         # readbacks (FIFO — loss order is the dispatch order) and the tail
         # costs only the copies.
+        observed = len(losses)  # mid-run drains already went past the monitor
         for drain in pending_drains:
             losses.extend(drain.resolve())
         losses.extend(host_floats(loss_hist))
+        if monitor is not None:
+            # the suffix never went through a mid-run drain window: a run
+            # that diverged in its last steps still fails loudly
+            monitor.observe_losses(losses[observed:])
+        if mem is not None:
+            mem.sample("steady")
         if cfg.eval_at_end:
             evals.append(self.evaluate(params))
+            if mem is not None:
+                mem.sample("eval")
         if tracer is not None and self._owned_client is not None:
             # pull worker serve spans recorded since the last stats round
             # into the tracer before the caller exports the trace

@@ -1,0 +1,743 @@
+"""Run-health guardrail tests (repro.obs.health / memory + bench gate).
+
+Pins the contracts of the guardrails PR:
+
+- HealthMonitor: stall detection on synthetic clocks (tiny timeouts, no
+  real multi-second sleeps), NaN/Inf and EWMA-divergence loss gates on
+  synthetic streams, fault re-raise from ``beat``/``check``, one flight
+  record per run, worker-silence degradation through a scripted client,
+- the flight-record dump schema CI asserts: ``health.json`` (reason,
+  ages, loss tail), ``stacks.txt`` (faulthandler markers — thread *names*
+  are not printed, so assertions stay generic), ``trace.json``
+  (Perfetto-loadable when telemetry is wired),
+- monitoring is a no-op on the training stream: a monitored run's losses
+  are bitwise identical to an unmonitored one,
+- memory accounting: live-array probe, per-phase high-water peaks, the
+  trainer's phase samples, and the measured fused-table footprint feeding
+  ``fused_eligibility(measured_bytes=...)``,
+- the perf-regression gate (benchmarks/regression.py): direction-aware
+  classification, intersection-only comparison, tolerance overrides,
+  value-free fingerprints, baseline suppression, and exit codes,
+- telemetry satellites: serve-path spans/counters and IVF introspection
+  counters leave results bitwise unchanged,
+- GraphClient.heartbeat answers for every live worker and goes quiet
+  after close.
+"""
+import gc
+import json
+import math
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import DistributedGraphEngine, GraphClient, TOY, generate
+from repro.obs import (
+    HealthConfig,
+    HealthMonitor,
+    LossAnomalyError,
+    MemoryAccountant,
+    RunStalledError,
+    Telemetry,
+    device_memory_stats,
+    live_array_bytes,
+    memory_snapshot,
+)
+
+RELS = ("u2click2i", "i2click2u")
+
+HARD_TIMEOUT_S = 120
+
+
+@pytest.fixture
+def watchdog():
+    """Hard per-test timeout for the mp tests (mirrors test_graph_service)."""
+
+    def _expired(signum, frame):
+        raise TimeoutError(f"test exceeded hard {HARD_TIMEOUT_S}s watchdog")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(HARD_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return generate(TOY, seed=0)
+
+
+def make_trainer(ds, steps=6, engine_backend="inproc", **cfg_kw):
+    from repro.core import Graph4RecConfig, HeteroGNNConfig
+    from repro.embedding import EmbeddingConfig
+    from repro.sampling import EgoConfig, PairConfig, PipelineConfig
+    from repro.train import Graph4RecTrainer, TrainerConfig
+    from repro.walk import WalkConfig
+
+    mc = Graph4RecConfig(
+        embedding=EmbeddingConfig(num_nodes=ds.graph.num_nodes, dim=16),
+        gnn=HeteroGNNConfig(gnn_type="lightgcn", num_relations=2,
+                            num_layers=1, dim=16),
+        fanouts=(3,),
+        relations=RELS,
+        loss="inbatch_softmax",
+    )
+    pc = PipelineConfig(
+        walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=6),
+        pair=PairConfig(win_size=2),
+        ego=EgoConfig(relations=list(RELS), fanouts=[3]),
+        batch_pairs=64, walks_per_round=16,
+    )
+    engine = (
+        ds.graph if engine_backend == "mp"
+        else DistributedGraphEngine(ds.graph, num_partitions=2)
+    )
+    cfg = TrainerConfig(num_steps=steps, log_every=0, eval_at_end=False,
+                        seed=0, engine_backend=engine_backend, **cfg_kw)
+    return Graph4RecTrainer(ds, engine, mc, pc, cfg)
+
+
+def fast_cfg(tmp_path, **kw):
+    """A monitor config with millisecond clocks (no real waits) that
+    flight-records into the test's tmp dir."""
+    base = dict(
+        stall_timeout_s=0.05, poll_interval_s=0.01, worker_heartbeat_s=0.0,
+        flightrec_dir=str(tmp_path / "flightrec"),
+    )
+    base.update(kw)
+    return HealthConfig(**base)
+
+
+def wait_for(predicate, timeout_s=10.0):
+    deadline = time.monotonic() + timeout_s
+    while not predicate():
+        if time.monotonic() > deadline:
+            return False
+        time.sleep(0.005)
+    return True
+
+
+# ----------------------------------------------------------------- stalls
+@pytest.mark.quick
+class TestStallWatchdog:
+    def test_stall_dumps_and_arms_fault(self, tmp_path):
+        tel = Telemetry()
+        with tel.tracer.span("warmup", cat="test"):
+            pass
+        mon = HealthMonitor(fast_cfg(tmp_path), telemetry=tel)
+        mon.start()
+        try:
+            assert wait_for(lambda: mon.fault is not None)
+        finally:
+            mon.stop()
+        assert isinstance(mon.fault, RunStalledError)
+        assert "stall_timeout_s=0.05" in str(mon.fault)
+        # the training thread surfaces the fault on its next touchpoint
+        with pytest.raises(RunStalledError):
+            mon.check()
+        with pytest.raises(RunStalledError):
+            mon.beat(0)
+        assert tel.metrics.summary()["counters"]["health.stalls"] == 1
+
+    def test_flight_record_schema(self, tmp_path):
+        """The dump layout the CI trace-smoke job asserts."""
+        tel = Telemetry()
+        with tel.tracer.span("step", cat="trainer"):
+            pass
+        mon = HealthMonitor(fast_cfg(tmp_path), telemetry=tel)
+        mon.observe_losses([0.5, 0.25])
+        mon.start()
+        assert wait_for(lambda: mon.fault is not None)
+        mon.stop()
+        rec = mon.fault.flightrec
+        assert rec is not None and os.path.isdir(rec)
+        assert os.path.basename(rec).startswith(f"{os.getpid()}-00-")
+        assert os.path.basename(rec).endswith("-stall")
+        with open(os.path.join(rec, "health.json")) as f:
+            health = json.load(f)
+        assert health["reason"] == "stall"
+        assert health["losses_tail"] == [0.5, 0.25]
+        assert health["beat_age_s"] >= 0.05
+        assert health["context"]["alive_age_s"] >= 0.05
+        assert health["metrics"]["counters"]["health.stalls"] == 1
+        with open(os.path.join(rec, "trace.json")) as f:
+            trace = json.load(f)
+        names = {e.get("name") for e in trace["traceEvents"]}
+        assert "step" in names  # the Perfetto snapshot is loadable + real
+        with open(os.path.join(rec, "stacks.txt")) as f:
+            stacks = f.read()
+        # faulthandler prints thread ids, not names: assert on the frame
+        # markers every dump carries
+        assert "Thread" in stacks and "File" in stacks
+
+    def test_one_dump_per_run_and_watchdog_exits(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path))
+        mon.start()
+        thread = mon._thread
+        assert wait_for(lambda: mon.fault is not None)
+        # the watchdog retires itself after arming (one dump per run)
+        assert wait_for(lambda: not thread.is_alive())
+        root = str(tmp_path / "flightrec")
+        assert len(os.listdir(root)) == 1
+        mon.stop()
+
+    def test_beats_and_pulses_keep_it_alive(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path, stall_timeout_s=0.1,
+                                     poll_interval_s=0.02))
+        mon.start()
+        try:
+            deadline = time.monotonic() + 0.3
+            step = 0
+            while time.monotonic() < deadline:
+                mon.beat(step)
+                mon.pulse()
+                step += 1
+                time.sleep(0.02)
+            assert mon.fault is None
+            mon.check()  # does not raise
+        finally:
+            mon.stop()
+        assert not os.path.exists(str(tmp_path / "flightrec"))
+
+    def test_start_stop_idempotent(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path, stall_timeout_s=60.0))
+        mon.start()
+        first = mon._thread
+        mon.start()
+        assert mon._thread is first
+        mon.stop()
+        mon.stop()
+        assert mon._thread is None
+
+    def test_no_telemetry_still_dumps(self, tmp_path):
+        """Health without tracing: no trace.json, everything else intact."""
+        mon = HealthMonitor(fast_cfg(tmp_path))
+        mon.start()
+        assert wait_for(lambda: mon.fault is not None)
+        mon.stop()
+        rec = mon.fault.flightrec
+        assert sorted(os.listdir(rec)) == ["health.json", "stacks.txt"]
+        with open(os.path.join(rec, "health.json")) as f:
+            assert "metrics" not in json.load(f)
+
+
+# ----------------------------------------------------------- loss anomaly
+@pytest.mark.quick
+class TestLossAnomaly:
+    def test_nan_fails_immediately(self, tmp_path):
+        tel = Telemetry()
+        mon = HealthMonitor(fast_cfg(tmp_path), telemetry=tel)
+        mon.observe_losses([0.9, 0.8])
+        with pytest.raises(LossAnomalyError, match="non-finite") as ei:
+            mon.observe_losses([0.7, float("nan")])
+        rec = ei.value.flightrec
+        assert rec is not None and rec.endswith("-loss-anomaly")
+        with open(os.path.join(rec, "health.json")) as f:
+            health = json.load(f)
+        assert health["reason"] == "loss-anomaly"
+        tail = health["losses_tail"]
+        assert tail[:3] == [0.9, 0.8, 0.7] and math.isnan(tail[3])
+        assert tel.metrics.summary()["counters"]["health.loss_anomalies"] == 1
+        # the fault is sticky: the step loop dies on its next beat
+        with pytest.raises(LossAnomalyError):
+            mon.beat(3)
+
+    def test_inf_fails_too(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path))
+        with pytest.raises(LossAnomalyError, match="non-finite"):
+            mon.observe_losses([float("inf")])
+
+    def test_nan_check_off_is_permissive(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path, nan_check=False))
+        mon.observe_losses([0.5, float("nan"), float("inf"), 0.4])
+        assert mon.fault is None
+
+    def test_divergence_after_window(self, tmp_path):
+        mon = HealthMonitor(
+            fast_cfg(tmp_path, divergence_window=8, divergence_zmax=6.0)
+        )
+        # a stable-but-noisy stream trains the EWMA without tripping it
+        stream = [1.0 + 0.01 * ((-1) ** i) for i in range(20)]
+        mon.observe_losses(stream)
+        assert mon.fault is None
+        with pytest.raises(LossAnomalyError, match="diverged"):
+            mon.observe_losses([50.0])
+
+    def test_no_divergence_within_window(self, tmp_path):
+        """The first `window` observations never z-score: a cold EWMA has
+        no business rejecting the warmup losses."""
+        mon = HealthMonitor(
+            fast_cfg(tmp_path, divergence_window=8, divergence_zmax=6.0)
+        )
+        mon.observe_losses([1.0, 1.0, 1.0, 900.0])  # wild, but pre-window
+        assert mon.fault is None
+
+    def test_realistic_decay_stays_healthy(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path, divergence_window=16))
+        rng = np.random.default_rng(0)
+        steps = np.arange(200)
+        losses = 2.0 * np.exp(-steps / 80.0) + 0.1 + rng.normal(0, 0.02, 200)
+        mon.observe_losses(losses)
+        assert mon.fault is None
+
+    def test_divergence_window_zero_disables(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path, divergence_window=0))
+        mon.observe_losses([1.0] * 50 + [1e9])
+        assert mon.fault is None
+        with pytest.raises(LossAnomalyError):  # NaN gate stays armed
+            mon.observe_losses([float("nan")])
+
+    def test_loss_tail_bounded(self, tmp_path):
+        mon = HealthMonitor(fast_cfg(tmp_path, divergence_window=0,
+                                     loss_tail=16))
+        mon.observe_losses(np.linspace(1.0, 0.5, 100))
+        assert len(mon._loss_tail) == 16
+
+
+# -------------------------------------------------------- worker liveness
+class _ScriptedClient:
+    """A GraphClient stand-in whose heartbeat answers are scripted."""
+
+    def __init__(self, alive):
+        self.alive = dict(alive)
+        self.calls = 0
+        self._last_stats = {0: {"batches": 7}}
+        self._dead = {}
+
+    def heartbeat(self, timeout=5.0):
+        self.calls += 1
+        return dict(self.alive)
+
+
+@pytest.mark.quick
+class TestWorkerLiveness:
+    def test_silent_worker_marks_degraded_not_fatal(self, tmp_path):
+        tel = Telemetry()
+        client = _ScriptedClient({0: False, 1: True})
+        cfg = fast_cfg(tmp_path, stall_timeout_s=60.0, poll_interval_s=0.01,
+                       worker_heartbeat_s=0.02, worker_silent_rounds=2)
+        mon = HealthMonitor(cfg, telemetry=tel, client=client)
+        mon.start()
+        try:
+            assert wait_for(lambda: mon.degraded)
+        finally:
+            mon.stop()
+        assert client.calls >= 2
+        mon.check()  # degraded is a warning state, never a fault
+        snap = tel.metrics.summary()
+        assert snap["counters"]["health.worker_silent"] == 1
+        assert snap["gauges"]["health.degraded"]["value"] == 1.0
+        marks = [name for name, _, _, _ in tel.tracer.marks()]
+        assert "health.degraded" in marks
+        # the silent worker's streak and the healthy worker's reset
+        assert mon._silent[0] >= 2 and mon._silent[1] == 0
+        # degraded state rides into any later flight record
+        rec = mon.dump("test")
+        with open(os.path.join(rec, "health.json")) as f:
+            health = json.load(f)
+        assert health["degraded"] is True
+        assert health["workers"]["last_stats"]["0"]["batches"] == 7
+        assert health["workers"]["silent_rounds"]["0"] >= 2
+
+    def test_heartbeat_errors_are_not_health_events(self, tmp_path):
+        class Exploding:
+            calls = 0
+
+            def heartbeat(self, timeout=5.0):
+                self.calls += 1
+                raise RuntimeError("client racing shutdown")
+
+        client = Exploding()
+        cfg = fast_cfg(tmp_path, stall_timeout_s=60.0, poll_interval_s=0.01,
+                       worker_heartbeat_s=0.02)
+        mon = HealthMonitor(cfg, client=client)
+        mon.start()
+        try:
+            assert wait_for(lambda: client.calls >= 2)
+        finally:
+            mon.stop()
+        assert mon.fault is None and not mon.degraded
+
+
+@pytest.mark.mp
+@pytest.mark.usefixtures("watchdog")
+class TestGraphClientHeartbeat:
+    def test_heartbeat_live_and_closed(self, ds):
+        with GraphClient(ds.graph, num_partitions=2, num_workers=2) as c:
+            alive = c.heartbeat(timeout=10.0)
+            assert alive == {0: True, 1: True}
+            # the heartbeat rides the stats op: last_stats is now warm,
+            # so a flight record would carry real per-worker counters
+            assert set(c._last_stats) == {0, 1}
+            again = c.heartbeat(timeout=10.0)
+            assert again == {0: True, 1: True}
+        assert c.heartbeat() == {}  # closed client: quiet, not an error
+
+
+# ------------------------------------------------------ trainer integration
+@pytest.mark.quick
+class TestTrainerGuardrails:
+    def test_monitored_run_is_bitwise_noop(self, ds, tmp_path):
+        """The headline contract: guardrails on != numbers change."""
+        plain = make_trainer(ds, steps=8, prefetch_batches=2).train()
+        guarded = make_trainer(
+            ds, steps=8, prefetch_batches=2,
+            health=fast_cfg(tmp_path, stall_timeout_s=600.0),
+        ).train()
+        np.testing.assert_array_equal(
+            np.asarray(plain.losses), np.asarray(guarded.losses)
+        )
+        traced = make_trainer(
+            ds, steps=8, prefetch_batches=2, telemetry=Telemetry(),
+            health=fast_cfg(tmp_path, stall_timeout_s=600.0),
+        ).train()
+        np.testing.assert_array_equal(
+            np.asarray(plain.losses), np.asarray(traced.losses)
+        )
+        assert not os.path.exists(str(tmp_path / "flightrec"))
+
+    def test_monitor_lifecycle_and_loss_feed(self, ds, tmp_path):
+        tr = make_trainer(ds, steps=8, prefetch_batches=2,
+                          health=fast_cfg(tmp_path, stall_timeout_s=600.0))
+        res = tr.train()
+        mon = tr._health_monitor
+        assert mon is not None
+        assert mon._thread is None  # stopped in the run's finally
+        assert mon.fault is None
+        # every drained loss reached the anomaly gate
+        assert mon._loss_tail[-1] == float(res.losses[-1])
+        assert mon._last_step == 7
+
+    def test_off_by_default(self, ds):
+        tr = make_trainer(ds, steps=4, prefetch_batches=2)
+        tr.train()
+        assert tr.cfg.health is None and tr._health_monitor is None
+
+    def test_memory_phases_sampled(self, ds):
+        tel = Telemetry()
+        tr = make_trainer(ds, steps=6, prefetch_batches=2, telemetry=tel)
+        tr.train()
+        mem = tr._memory
+        assert mem is not None
+        assert {"tables", "steady"} <= set(mem.peaks)
+        assert all(v > 0 for v in mem.peaks.values())
+        gauges = tel.metrics.summary()["gauges"]
+        assert gauges["memory.tables_bytes"]["max"] > 0
+        assert gauges["memory.steady_bytes"]["max"] > 0
+
+
+# -------------------------------------------------------- memory accounting
+@pytest.mark.quick
+class TestMemoryAccounting:
+    def test_live_array_probe_sees_new_arrays(self):
+        import jax.numpy as jnp
+
+        gc.collect()
+        base = live_array_bytes()
+        x = jnp.arange(65536, dtype=jnp.int32)
+        x.block_until_ready()
+        assert live_array_bytes() >= base + x.nbytes
+        assert live_array_bytes() >= 0
+
+    def test_device_stats_gated(self):
+        stats = device_memory_stats()  # {} on the CPU backend — never raises
+        assert isinstance(stats, dict)
+        for per_dev in stats.values():
+            assert all(isinstance(v, int) for v in per_dev.values())
+
+    def test_accountant_peaks_and_summary(self):
+        from repro.obs import MetricsRegistry
+
+        reg = MetricsRegistry()
+        acc = MemoryAccountant(reg)
+        n1 = acc.sample("build")
+        with acc.scope("steady"):
+            pass
+        assert acc.peaks["build"] == n1 >= 0
+        assert "steady" in acc.peaks
+        s = acc.summary()
+        assert set(s) == {"phase_peak_bytes", "live_array_bytes",
+                          "device_stats"}
+        assert s["phase_peak_bytes"] == acc.peaks
+        assert reg.summary()["gauges"]["memory.build_bytes"]["value"] == n1
+
+    def test_peak_is_high_water(self):
+        acc = MemoryAccountant()
+        acc.peaks["p"] = 10**15  # pretend an earlier sample was larger
+        acc.sample("p")
+        assert acc.peaks["p"] == 10**15
+
+    def test_snapshot_shape(self):
+        snap = memory_snapshot()
+        assert set(snap) == {"live_array_bytes", "device_stats"}
+
+
+# -------------------------------------------------- fused measured budget
+@pytest.mark.quick
+class TestFusedMeasuredBudget:
+    def _graph_and_cfg(self):
+        from repro.graph.hetero_graph import HeteroGraph
+        from repro.sampling import PairConfig, PipelineConfig
+        from repro.walk import WalkConfig
+
+        src = np.repeat(np.arange(6), 5)
+        dst = np.tile(np.arange(5), 6)
+        g = HeteroGraph.from_edges(
+            {"u": 6, "i": 5}, {"u2click2i": (src, dst)}, symmetry=True
+        )
+        pc = PipelineConfig(
+            walk=WalkConfig(metapaths=["u2click2i - i2click2u"], walk_len=5),
+            pair=PairConfig(win_size=2), batch_pairs=32, walks_per_round=16,
+        )
+        return g, pc
+
+    def test_device_table_bytes_measures_resident_arrays(self):
+        from repro.sampling.fused import FusedSampler
+
+        g, pc = self._graph_and_cfg()
+        fs = FusedSampler(g, pc)
+        measured = fs.device_table_bytes()
+        # at least adjacency + degree rows are resident
+        assert measured >= fs._adj.nbytes + fs._deg.nbytes > 0
+
+    def test_eligibility_on_measured_bytes(self):
+        from repro.sampling.fused import FusedConfig, fused_eligibility
+
+        g, pc = self._graph_and_cfg()
+        ok, reason = fused_eligibility(g, pc)
+        assert ok and "(estimated)" in reason
+        ok, reason = fused_eligibility(g, pc, measured_bytes=1024)
+        assert ok and "(measured)" in reason
+        ok, reason = fused_eligibility(
+            g, pc, fused=FusedConfig(budget_mb=0.0001),
+            measured_bytes=1 << 20,
+        )
+        assert not ok and "(measured)" in reason and "budget" in reason
+
+    def test_trainer_plan_carries_measured_bytes(self, ds):
+        tr = make_trainer(ds, steps=4, prefetch_batches=0,
+                          sampling_backend="fused")
+        res = tr.train()
+        assert res.plan["sampling"] == "fused"
+        measured = res.plan["fused_measured_bytes"]
+        assert isinstance(measured, int) and measured > 0
+
+    def test_host_plan_has_no_measured_bytes(self, ds):
+        res = make_trainer(ds, steps=4, prefetch_batches=0,
+                           sampling_backend="host").train()
+        assert res.plan["fused_measured_bytes"] is None
+
+
+# ------------------------------------------------------- regression gate
+@pytest.mark.quick
+class TestRegressionGate:
+    def test_classify_directions(self):
+        from benchmarks.regression import (
+            HIGHER_BETTER, LOWER_BETTER, classify,
+        )
+
+        assert classify("chunked_qps") == HIGHER_BETTER
+        assert classify("pairs_per_sec_prefetch") == HIGHER_BETTER
+        assert classify("speedup_auto") == HIGHER_BETTER
+        assert classify("ivf_recall_at_k") == HIGHER_BETTER
+        assert classify("ivf_build_s") == LOWER_BETTER
+        assert classify("per_call_us") == LOWER_BETTER
+        assert classify("wall_s_traced") == LOWER_BETTER
+        assert classify("round_latency_ns") == LOWER_BETTER
+        # config/count leaves are out of scope for the gate
+        for leaf in ("steps", "nlist", "nprobe", "chunked_temp_bytes",
+                     "dataset", "quick", "item_chunk", "num_workers",
+                     "trace_events", "fused_measured_bytes"):
+            assert classify(leaf) is None, leaf
+
+    def test_flatten_numeric_leaves(self):
+        from benchmarks.regression import flatten
+
+        got = flatten({"a": {"b": 1, "flag": True, "s": "text"},
+                       "c": 2.5, "d": {"e": {"f": 3}}})
+        assert got == {"a.b": 1.0, "c": 2.5, "d.e.f": 3.0}
+
+    def test_compare_is_direction_aware(self):
+        from benchmarks.regression import compare
+
+        committed = {"pipeline": {"pairs_per_sec_prefetch": 1000.0,
+                                  "wall_s": 2.0}}
+        assert compare(committed, committed) == []
+        # higher-better falling beyond the band is a finding; rising never
+        fell = {"pipeline": {"pairs_per_sec_prefetch": 400.0, "wall_s": 2.0}}
+        [f] = compare(committed, fell)
+        assert f["metric"] == "pipeline.pairs_per_sec_prefetch"
+        assert f["direction"] == "higher-better"
+        assert "fell" in f["message"]
+        rose = {"pipeline": {"pairs_per_sec_prefetch": 5000.0, "wall_s": 2.0}}
+        assert compare(committed, rose) == []
+        # lower-better is the mirror image
+        slow = {"pipeline": {"pairs_per_sec_prefetch": 1000.0, "wall_s": 3.5}}
+        [f] = compare(committed, slow)
+        assert f["direction"] == "lower-better" and "rose" in f["message"]
+        fast = {"pipeline": {"pairs_per_sec_prefetch": 1000.0, "wall_s": 0.5}}
+        assert compare(committed, fast) == []
+
+    def test_compare_intersection_only(self):
+        from benchmarks.regression import compare
+
+        committed = {"retrieval": {"I10000": {"ivf_qps": 100.0,
+                                              "seed_qps": 50.0}}}
+        fresh = {"retrieval": {"I10000": {"ivf_qps": 90.0}},
+                 "extra": {"other_qps": 1.0}}
+        assert compare(committed, fresh) == []  # 0.9x is inside the band
+
+    def test_tolerance_override_for_recall(self):
+        from benchmarks.regression import compare, tolerance_for
+
+        assert tolerance_for("retrieval.I10000.ivf_recall_at_k") == 0.10
+        assert tolerance_for("pipeline.wall_s") == 0.5
+        committed = {"retrieval": {"ivf_recall_at_k": 1.0}}
+        [f] = compare(committed, {"retrieval": {"ivf_recall_at_k": 0.85}})
+        assert f["tolerance"] == 0.10
+        assert compare(committed,
+                       {"retrieval": {"ivf_recall_at_k": 0.95}}) == []
+
+    def test_fingerprint_is_value_free(self):
+        from benchmarks.regression import compare, fingerprint
+
+        committed = {"p": {"wall_s": 2.0}}
+        [a] = compare(committed, {"p": {"wall_s": 4.0}})
+        [b] = compare(committed, {"p": {"wall_s": 40.0}})
+        assert fingerprint(a) == fingerprint(b) == "lower-better:p.wall_s"
+
+    def test_baseline_roundtrip(self, tmp_path):
+        from benchmarks.regression import (
+            compare, load_baseline, write_baseline,
+        )
+
+        path = str(tmp_path / "bench_baseline.json")
+        assert load_baseline(path) == set()
+        findings = compare({"p": {"wall_s": 2.0}}, {"p": {"wall_s": 4.0}})
+        write_baseline(findings, path)
+        assert load_baseline(path) == {"lower-better:p.wall_s"}
+
+    def test_main_exit_codes(self, tmp_path, capsys):
+        from benchmarks.regression import main
+
+        committed = {"pipeline": {"pairs_per_sec_prefetch": 1000.0,
+                                  "wall_s": 2.0, "steps": 64}}
+        cpath = tmp_path / "BENCH.json"
+        cpath.write_text(json.dumps(committed))
+        bpath = str(tmp_path / "baseline.json")
+
+        def run(fresh):
+            fpath = tmp_path / "fresh.json"
+            fpath.write_text(json.dumps(fresh))
+            return main(["--against", str(cpath), "--compare", str(fpath),
+                         "--baseline", bpath])
+
+        assert run(committed) == 0
+        assert "2 direction-aware metrics compared" in capsys.readouterr().out
+        bad = {"pipeline": {"pairs_per_sec_prefetch": 100.0, "wall_s": 2.0}}
+        assert run(bad) == 1
+        assert "REGRESSION" in capsys.readouterr().out
+        # --write-baseline accepts today's findings; the rerun passes
+        fpath = tmp_path / "fresh.json"
+        fpath.write_text(json.dumps(bad))
+        assert main(["--against", str(cpath), "--compare", str(fpath),
+                     "--baseline", bpath, "--write-baseline"]) == 0
+        assert run(bad) == 0
+        assert "(1 baselined)" in capsys.readouterr().out
+        # recovery makes the stale fingerprint harmless
+        assert run(committed) == 0
+        # no committed benchmarks at all is its own failure mode
+        assert main(["--against", str(tmp_path / "missing.json"),
+                     "--compare", str(cpath), "--baseline", bpath]) == 2
+
+    def test_committed_benchmarks_have_gated_metrics(self):
+        """The real committed JSONs must expose direction-aware leaves —
+        otherwise the gate silently compares nothing."""
+        from benchmarks.regression import classify, flatten, load_committed
+
+        committed = load_committed(["BENCH_throughput.json",
+                                    "BENCH_recall.json"])
+        assert committed, "committed benchmark JSONs missing from the repo"
+        gated = [p for p in flatten(committed)
+                 if classify(p.rsplit(".", 1)[-1]) is not None]
+        assert len(gated) >= 10
+
+
+# ---------------------------------------------------- telemetry satellites
+@pytest.mark.quick
+class TestServeTelemetry:
+    def test_serve_spans_and_metrics(self):
+        import jax
+
+        from repro.configs import get_arch
+        from repro.serve import BatchedServer, ServeConfig
+
+        spec = get_arch("smollm-135m", reduced=True)
+        params = spec.init_params(jax.random.PRNGKey(0))
+        cfg = ServeConfig(batch_size=2, max_new_tokens=3, cache_len=32)
+        tel = Telemetry()
+        srv = BatchedServer(spec, params, cfg, telemetry=tel)
+        prompts = [[1, 2], [3], [4, 5, 6]]  # 3 requests -> 2 batches
+        outs = srv.generate(prompts)
+        assert BatchedServer(spec, params, cfg).generate(prompts) == outs
+        snap = tel.metrics.summary()
+        assert snap["counters"]["serve.requests"] == 3
+        assert snap["histograms"]["serve.request_ns"]["count"] == 3
+        assert snap["gauges"]["serve.queue_depth"]["max"] == 3.0
+        assert snap["gauges"]["serve.queue_depth"]["value"] == 0.0
+        spans = [s for _, _, ss, _ in tel.tracer.threads() for s in ss]
+        batches = [s for s in spans if s[0] == "serve.batch"]
+        assert len(batches) == 2
+        assert sum(s[4]["requests"] for s in batches) == 3
+        assert all(s[1] == "serve" for s in batches)
+
+
+@pytest.mark.quick
+class TestIVFTelemetry:
+    def test_ivf_counters_leave_results_unchanged(self):
+        from repro.core.recall import evaluate_recall
+        from repro.retrieval.ivf import IVFConfig, IVFIndex
+
+        rng = np.random.default_rng(3)
+        U, I = 30, 80
+        ue = rng.normal(size=(U, 12)).astype(np.float32)
+        ie = rng.normal(size=(I, 12)).astype(np.float32)
+        train = np.stack([rng.integers(0, U, 400), rng.integers(0, I, 400)], 1)
+        evalp = np.stack([rng.integers(0, U, 90), rng.integers(0, I, 90)], 1)
+        kw = dict(top_k=20, method="ivf", strategies=("u2i",),
+                  ivf=IVFConfig(nlist=8, nprobe=4, balance_factor=2.0))
+        tel = Telemetry()
+        counted = evaluate_recall(ue, ie, train, evalp, telemetry=tel, **kw)
+        plain = evaluate_recall(ue, ie, train, evalp, **kw)
+        assert counted == plain  # introspection never changes retrieval
+        counters = tel.metrics.summary()["counters"]
+        # u2i searches each held-out user with history exactly once,
+        # probing nprobe cells and scoring the padded candidate width
+        n_users = len(set(evalp[:, 0].tolist()) & set(train[:, 0].tolist()))
+        assert counters["ivf.cells_probed"] == n_users * 4
+        assert counters["ivf.candidates_scored"] > 0
+        assert counters["ivf.candidates_scored"] % n_users == 0
+        # spill accounting covers both the item and the user index
+        both = sum(
+            IVFIndex.build(e, kw["ivf"]).spilled_items for e in (ie, ue)
+        )
+        assert counters["ivf.spill_events"] == both >= 0
+
+    def test_spilled_items_counted_on_build(self):
+        from repro.retrieval.ivf import IVFConfig, IVFIndex
+
+        rng = np.random.default_rng(0)
+        # one dense cluster + noise: the hot cell must spill under a cap
+        pts = np.concatenate([
+            rng.normal(0, 0.01, size=(200, 8)),
+            rng.normal(5, 1.0, size=(40, 8)),
+        ]).astype(np.float32)
+        capped = IVFIndex.build(pts, IVFConfig(nlist=16, balance_factor=1.0))
+        uncapped = IVFIndex.build(pts, IVFConfig(nlist=16, balance_factor=0.0))
+        assert capped.spilled_items > 0
+        assert uncapped.spilled_items == 0

@@ -222,6 +222,44 @@ class TestTracer:
         assert t.span_count() == 1
         assert t.dropped_count() == 2
 
+    def test_ingest_negative_offset_shifts_forward(self):
+        """A worker whose monotonic clock lags the trainer's has a
+        negative offset; correction must shift its spans forward, never
+        produce times before the foreign t0."""
+        t = Tracer()
+        t.ingest("graph-worker-1", 4243,
+                 [("worker.sample", "worker", 1000, 10, None)],
+                 offset_ns=-400)
+        [(_, _, spans, _)] = t.foreign()
+        assert spans == [("worker.sample", "worker", 1400, 10, None)]
+
+    def test_ingest_accumulates_rounds_and_drops(self):
+        """Repeated stats rounds from one worker each land as their own
+        batch; spans and drop counts accumulate instead of clobbering."""
+        t = Tracer()
+        t.ingest("graph-worker-0", 99, [("a", "w", 10, 1, None)], dropped=2)
+        t.ingest("graph-worker-0", 99, [("b", "w", 20, 1, None)], dropped=3)
+        batches = t.foreign()
+        assert [s[0] for _, _, spans, _ in batches for s in spans] == ["a", "b"]
+        assert t.span_count() == 2
+        assert t.dropped_count() == 5
+
+    def test_mark_records_instant_events(self):
+        t = Tracer()
+        t.mark("trainer.fused_fallback", reason="budget")
+        t.mark("plain")
+        marks = t.marks()
+        assert [m[0] for m in marks] == ["trainer.fused_fallback", "plain"]
+        name, cat, t0, args = marks[0]
+        assert cat == "mark" and t0 > 0 and args == {"reason": "budget"}
+        assert marks[1][3] is None
+
+    def test_mark_capacity_bounded(self):
+        t = Tracer()
+        for i in range(1100):
+            t.mark(f"m{i}")
+        assert len(t.marks()) == 1024  # oldest kept: marks are rare events
+
     def test_span_scope_disabled_is_shared_nullcontext(self):
         scope = span_scope(None, "anything", rid=1)
         assert isinstance(scope, contextlib.nullcontext)
@@ -284,6 +322,30 @@ class TestChromeExport:
         # rid rides through to the exported args: the correlation handle
         worker = next(e for e in evs if e["pid"] == 777 and e["ph"] == "X")
         assert worker["args"]["rid"] == 9
+
+    def test_overflow_drop_counts_survive_export(self):
+        """Ring overflow on a local thread and reported worker drops both
+        surface in otherData.dropped_spans — a truncated trace must say
+        so, not pretend it is complete."""
+        tel = Telemetry(span_capacity=4)
+        for i in range(10):
+            tel.tracer.add_span(f"s{i}", "t", i, 1)
+        tel.tracer.ingest("graph-worker-0", 777, [], dropped=5)
+        trace = tel.chrome_trace()
+        assert trace["otherData"]["dropped_spans"] == 6 + 5
+        xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+        assert len(xs) == 4  # newest survive
+
+    def test_marks_export_as_instant_events(self):
+        tel = Telemetry()
+        tel.tracer.mark("health.degraded", reason="worker 0 silent")
+        [ev] = [e for e in tel.chrome_trace()["traceEvents"]
+                if e["ph"] == "i"]
+        assert ev["name"] == "health.degraded"
+        assert ev["s"] == "p"  # process-scoped instant line in Perfetto
+        assert ev["pid"] == tel.tracer.pid
+        assert ev["args"] == {"reason": "worker 0 silent"}
+        assert isinstance(ev["ts"], float)
 
     def test_disabled_run_emits_nothing(self):
         tel = Telemetry()  # never handed to anything
