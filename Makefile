@@ -1,6 +1,6 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-walk bench-sanitize bench-attr bench-trace bench-check
+.PHONY: test test-fast lint bench-throughput bench-step bench-engine bench-recall bench-recall-full bench-walk bench-sanitize bench-attr bench-trace bench-check
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -22,6 +22,10 @@ bench-engine:
 
 bench-recall:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_recall.py --quick
+
+# adds the 10M-item arm (device-resident int8 index, host re-rank) + more reps
+bench-recall-full:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_recall.py --full
 
 bench-walk:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_throughput.py --walk --full

@@ -17,7 +17,8 @@ Mechanics:
   produce; those are out of scope for the gate, their pins live in
   ``tests/test_attribution.py``).
 - Every leaf is classified **direction-aware** by its name: throughput-
-  like metrics (``*qps``, ``pairs_per_sec*``, ``speedup*``, ``recall*``,
+  like metrics (``*qps``, ``pairs_per_sec*``, ``speedup*`` — including
+  ``ivf_speedup_median_vs_chunked`` — ``recall*``,
   ``steps_per_sec*``, ``saturation``) regress by going *down*;
   latency/time-like metrics (``*_us``/``*_ms``/``*_s``/``*_ns``,
   ``wall_*``, ``overhead``) regress by going *up*. Config and count
@@ -56,7 +57,7 @@ LOWER_BETTER = "lower-better"
 _IGNORE = re.compile(
     r"(^quick$|^dataset$|^steps$|^count$|^dim$|^k$|^reps$|^prefetch$"
     r"|^num_|^workers$|^partitions$|^batch_nodes$|^driver_threads$"
-    r"|^item_chunk$|^auto_plan_prefetch$|nlist|nprobe|_bytes$|^memory"
+    r"|^item_chunk$|^auto_plan_prefetch$|nlist|nprobe|_lpad$|_bytes$|^memory"
     r"|^trace_events$|^frac_of_wall$|_items$|_rounds$|^engine_backend$"
     r"|^sampling$)"
 )

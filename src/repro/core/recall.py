@@ -125,7 +125,8 @@ def _make_searchers(
         idx = {"item": IVFIndex.build(ie, cfg), "user": IVFIndex.build(ue, cfg)}
         if telemetry is not None:
             # introspection counters: why IVF recall/latency is what it is
-            # (cells probed x list width = candidates actually scored;
+            # (cells probed, and the candidates the gather stage *actually*
+            # scored — true CSR list lengths, not the padded upper bound;
             # spill events = items only findable via their 2nd-best cell)
             m = telemetry.metrics
             m.counter("ivf.spill_events").inc(
@@ -135,13 +136,11 @@ def _make_searchers(
             c_cand = m.counter("ivf.candidates_scored")
 
             def make_counted(ix):
-                nprobe = min(ix.config.nprobe, ix.config.nlist)
-                per_q = ix.candidates_per_query
-
                 def search(q, k, ex=None):
-                    c_cells.inc(len(q) * nprobe)
-                    c_cand.inc(len(q) * per_q)
-                    return ix.search(q, k, exclude=ex)
+                    res = ix.search(q, k, exclude=ex)
+                    c_cells.inc(ix.last_cells_probed)
+                    c_cand.inc(ix.last_candidates_scored)
+                    return res
 
                 return search
 

@@ -22,10 +22,10 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as model_lib
+from repro.lint.sanitizer import host_array
 from repro.sampling.ego import EgoConfig, sample_ego_batch
 from repro.train import checkpoint
 
@@ -82,15 +82,15 @@ def embed_all_nodes(
             slots = None
             if vspecs:
                 slots = {
-                    k: jnp.asarray(v)
+                    k: jax.device_put(v)
                     for k, v in model_lib._slots_for_ids(graph, ids, vspecs).items()
                 }
-            h = enc(params, jnp.asarray(ids), slots)
+            h = enc(params, jax.device_put(ids), slots)
         else:
             ego = sample_ego_batch(rng, engine, ids, ego_cfg)
             levels, slots = model_lib._ego_arrays(graph, ego, cfg)
             h = enc(params, levels, slots)
-        h = np.asarray(h, dtype=np.float32)
+        h = host_array(h, dtype=np.float32)
         if out is None:
             out = np.empty((N, h.shape[-1]), dtype=np.float32)
         out[lo : lo + n_real] = h[:n_real]
@@ -110,7 +110,7 @@ def export_embeddings(
     natural unit for a multi-host serving fleet where each replica memory-
     maps its own rows. Returns the normalized checkpoint path.
     """
-    emb = np.asarray(emb)
+    emb = host_array(emb)
     num_shards = max(1, min(int(num_shards), emb.shape[0] or 1))
     tree = {
         "meta": {

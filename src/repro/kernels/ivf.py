@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: IVF gather-then-score over packed inverted lists.
+
+The IVF search hot loop is "for each (query, probed cell): fetch that
+cell's packed quantized rows, score them against the query, fold into the
+query's running shortlist". The host-loop version of that is exactly the
+retrieval bug this kernel exists to kill: the list offsets live in scalar
+memory (``PrefetchScalarGridSpec``), so each grid step DMAs its own
+``lpad``-row slice of the int8 code table straight from HBM into a VMEM
+scratch buffer — no per-call upload, no dense (nlist, max_len) padding, no
+(Q, C, d) candidate tensor.
+
+Grid: (Q, nprobe) with the probe axis innermost. The (1, S) output blocks
+for a query map to the same slab for every probe step (the revisited-output
+accumulation pattern shared with kernels/topk.py): initialized at probe 0,
+merged every step, final after the last probe. Scoring is asymmetric: f32
+query x int8 codes x per-row f32 dequant scale — the codes stay int8 in
+HBM and VMEM, and only the ``lpad x d`` working slice is ever dequantized.
+
+Tie-break contract: the [running | new chunk] concatenation ranks
+candidates in flat (probe, within-list) order and ``lax.top_k`` keeps the
+first occurrence of a tied value — identical to ``ref.ivf_list_topk_ref``'s
+flat top-k (the conformance oracle). The exact re-rank stage above this
+kernel re-sorts survivors by item id, so the end-to-end lower-id-wins
+contract never depends on probe order.
+
+On CPU (this container) the kernel runs with interpret=True; on TPU the
+async copies become real HBM->VMEM DMAs overlapped with the VPU scoring of
+the previous probe's slice.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# python float so the kernel body never captures a traced constant
+NEG_INF = float("-inf")
+
+
+def _ivf_list_kernel(
+    starts_ref,  # (Q, P) scalar-prefetch: packed-row offset per (query, probe)
+    lens_ref,  # (Q, P) scalar-prefetch: true list length per (query, probe)
+    q_ref,  # (1, d) query block
+    codes_ref,  # (Ip, d) int8 code table, HBM/ANY
+    scales_ref,  # (Ip, 1) f32 dequant scales, HBM/ANY
+    os_ref,  # (1, S) running / final shortlist scores
+    or_ref,  # (1, S) running / final shortlist packed-row indices
+    codes_vmem,  # (lpad, d) int8 scratch: the DMA landing slab
+    scales_vmem,  # (lpad, 1) f32 scratch
+    csem,
+    ssem,
+    *,
+    lpad: int,
+    shortlist: int,
+):
+    qi = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, NEG_INF)
+        or_ref[...] = jnp.full_like(or_ref, -1)
+
+    start = starts_ref[qi, p]
+    ln = lens_ref[qi, p]
+    ccp = pltpu.make_async_copy(
+        codes_ref.at[pl.ds(start, lpad), :], codes_vmem, csem
+    )
+    scp = pltpu.make_async_copy(
+        scales_ref.at[pl.ds(start, lpad), :], scales_vmem, ssem
+    )
+    ccp.start()
+    scp.start()
+    q = q_ref[...].astype(jnp.float32)[0]  # (d,)
+    ccp.wait()
+    scp.wait()
+    # asymmetric distance: f32 query x int8 codes, per-row dequant scale
+    raw = jnp.dot(
+        codes_vmem[...].astype(jnp.float32), q, preferred_element_type=jnp.float32
+    )  # (lpad,)
+    scores = raw * scales_vmem[...][:, 0]
+    off = jax.lax.broadcasted_iota(jnp.int32, (lpad,), 0)
+    valid = off < ln
+    scores = jnp.where(valid, scores, NEG_INF)
+    rows = jnp.where(valid, start + off, -1)
+
+    all_s = jnp.concatenate([os_ref[0, :], scores])  # (S + lpad,)
+    all_r = jnp.concatenate([or_ref[0, :], rows])
+    best, pos = jax.lax.top_k(all_s, shortlist)
+    os_ref[...] = best[None]
+    or_ref[...] = jnp.take(all_r, pos)[None]
+
+
+def ivf_list_topk_pallas(
+    queries: jnp.ndarray,  # (Q, d) float32
+    codes: jnp.ndarray,  # (Ip, d) int8; Ip >= max(starts) + lpad (DMA pad)
+    scales: jnp.ndarray,  # (Ip, 1) float32
+    starts: jnp.ndarray,  # (Q, P) int32
+    lengths: jnp.ndarray,  # (Q, P) int32, <= lpad
+    *,
+    lpad: int,
+    shortlist: int,
+    interpret: bool = False,
+):
+    """Scalar-prefetch-driven gather-then-score -> per-query shortlist.
+
+    Returns ((Q, S) f32 approx scores, (Q, S) i32 packed-row indices, -1
+    for empty slots). Contract matches ``ref.ivf_list_topk_ref`` exactly;
+    the builder guarantees the code table carries ``lpad`` rows of zero
+    padding so the fixed-width DMA slice never reads out of bounds.
+    """
+    Q, d = queries.shape
+    P = starts.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, P),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda qi, p, s_ref, l_ref: (qi, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, shortlist), lambda qi, p, s_ref, l_ref: (qi, 0)),
+            pl.BlockSpec((1, shortlist), lambda qi, p, s_ref, l_ref: (qi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((lpad, d), codes.dtype),
+            pltpu.VMEM((lpad, 1), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out_s, out_r = pl.pallas_call(
+        functools.partial(_ivf_list_kernel, lpad=lpad, shortlist=shortlist),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, shortlist), jnp.float32),
+            jax.ShapeDtypeStruct((Q, shortlist), jnp.int32),
+        ],
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lengths.astype(jnp.int32), queries, codes, scales)
+    return out_s, out_r

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.inbatch_loss import inbatch_loss_rows_pallas
+from repro.kernels.ivf import ivf_list_topk_pallas
 from repro.kernels.row_adagrad import row_adagrad_scatter_pallas
 from repro.kernels.seg_aggr import seg_aggr_pallas
 from repro.kernels.topk import chunked_topk_pallas
@@ -43,6 +44,28 @@ def streaming_topk(
     return chunked_topk_pallas(
         queries, items, k, exclude=exclude, item_chunk=item_chunk,
         tile_q=tile_q, interpret=_interpret(),
+    )
+
+
+def ivf_list_topk(
+    queries: jnp.ndarray,
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    starts: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    lpad: int,
+    shortlist: int,
+):
+    """IVF gather-then-score over CSR inverted lists (kernels/ivf.py):
+    scalar-prefetched list offsets drive per-probe HBM->VMEM DMAs of the
+    int8 code table. Returns ((Q, S) f32 approx scores, (Q, S) i32
+    packed-row indices); contract matches ``ref.ivf_list_topk_ref``. Called
+    from inside ``retrieval.ivf``'s jitted search, so no jit wrapper here.
+    """
+    return ivf_list_topk_pallas(
+        queries, codes, scales, starts, lengths,
+        lpad=lpad, shortlist=shortlist, interpret=_interpret(),
     )
 
 

@@ -128,6 +128,56 @@ def chunked_topk_ref(
     return best_s, best_i.astype(jnp.int32)
 
 
+# ------------------------------------------------------------ IVF list topk
+def ivf_list_topk_ref(
+    queries: jnp.ndarray,  # (Q, d) float32
+    codes: jnp.ndarray,  # (Ip, d) int8 cell-sorted quantized rows (DMA-padded)
+    scales: jnp.ndarray,  # (Ip, 1) float32 per-row dequant scales
+    starts: jnp.ndarray,  # (Q, P) int32 packed-row offset of each probed list
+    lengths: jnp.ndarray,  # (Q, P) int32 true list lengths
+    *,
+    lpad: int,  # max list length: the fixed slice width gathered per probe
+    shortlist: int,  # survivors kept per query (S)
+    batch_size: int = 32,
+):
+    """Gather-then-score over CSR inverted lists -> per-query shortlist.
+
+    For each (query, probe): slice ``lpad`` packed rows at ``starts``,
+    dequantize (asymmetric distance: f32 query x int8 codes x per-row
+    scale), mask slots past ``lengths`` to -inf, and keep the ``shortlist``
+    best across all probes. Returns ((Q, S) f32 approx scores, (Q, S) i32
+    packed-row indices, -1 for empty slots).
+
+    Tie-break: candidates rank in flat (probe, within-list) order and
+    ``lax.top_k`` keeps the first occurrence — the same order the Pallas
+    kernel's [running | new chunk] merge preserves inductively. Lists
+    longer than ``lpad`` are truncated to ``lpad`` entries (the builder
+    guarantees ``lengths <= lpad``).
+
+    This is also the production XLA path on non-TPU backends (``lax.map``
+    over ``batch_size`` query blocks bounds the gather working set), not
+    just the kernel oracle.
+    """
+    off = jnp.arange(lpad, dtype=jnp.int32)
+
+    def one(args):
+        q, st, ln = args  # (d,), (P,), (P,)
+        rows = st[:, None] + off[None, :]  # (P, lpad)
+        valid = off[None, :] < ln[:, None]
+        safe = jnp.where(valid, rows, 0)
+        c = codes[safe].astype(jnp.float32)  # (P, lpad, d)
+        sc = scales[safe][..., 0]  # (P, lpad)
+        s = jnp.einsum("pld,d->pl", c, q.astype(jnp.float32)) * sc
+        s = jnp.where(valid, s, float("-inf")).reshape(-1)
+        r = jnp.where(valid, rows, -1).reshape(-1)
+        best, pos = jax.lax.top_k(s, shortlist)
+        return best, r[pos]
+    return jax.lax.map(
+        one, (queries, starts, lengths),
+        batch_size=min(batch_size, queries.shape[0]),
+    )
+
+
 # ------------------------------------------------------------- row adagrad
 def row_adagrad_scatter_ref(
     table: jnp.ndarray,  # (N, D)

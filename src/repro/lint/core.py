@@ -38,6 +38,10 @@ HOT_PATH_GLOBS = (
     "src/repro/train/trainer.py",
     "src/repro/sampling/fused.py",
     "src/repro/graph/service/*.py",
+    # the serving path: per-call host<->device traffic here is exactly the
+    # "IVF loses to brute force" class of bug (BENCH_recall, ROADMAP item 3)
+    "src/repro/retrieval/*.py",
+    "src/repro/infer/*.py",
 )
 KERNEL_GLOB = "src/repro/kernels/*.py"
 TEST_GLOB = "tests/*.py"

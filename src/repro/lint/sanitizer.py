@@ -26,6 +26,7 @@ import contextlib
 from typing import Iterable, List
 
 import jax
+import numpy as np
 
 
 def transfer_sanitizer(enabled: bool = True):
@@ -44,6 +45,17 @@ def transfer_sanitizer(enabled: bool = True):
 def host_scalar(x) -> float:
     """Deliberate single-value device->host sync (explicit device_get)."""
     return float(jax.device_get(x))
+
+
+def host_array(x, dtype=None):
+    """Deliberate device->host (or host->host) array materialization.
+
+    The audited spelling of ``np.asarray`` for hot-path modules: device
+    values are drained through an explicit ``jax.device_get`` first, so the
+    transfer shows up in profiles and the static H001 rule has exactly one
+    call site to trust. ``dtype`` applies a final cast on the host copy.
+    """
+    return np.asarray(jax.device_get(x), dtype=dtype)
 
 
 def host_floats(xs: Iterable) -> List[float]:

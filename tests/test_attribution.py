@@ -287,3 +287,46 @@ class TestCommittedBenchmarkPins:
 
     def test_walk_based_auto_not_slower_than_serial(self, bench):
         assert bench["pipeline/walk-based"]["speedup_auto"] >= 1.0
+
+
+_RECALL_JSON_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_recall.json"
+)
+
+
+class TestCommittedRecallPins:
+    """Regression pins on the committed BENCH_recall.json: the ANN rebuild
+    ("IVF is slower than brute force at every scale") must stay flipped.
+    Same contract as the throughput pins — the committed numbers are the
+    record, CI never re-times."""
+
+    @pytest.fixture(scope="class")
+    def retrieval(self):
+        with open(_RECALL_JSON_PATH) as f:
+            return json.load(f)["retrieval"]
+
+    def test_ivf_beats_chunked_at_serving_scale(self, retrieval):
+        # 100k up: the index must pay for itself (10k sits below the
+        # crossover deliberately — docs/retrieval.md)
+        for arm_key in ("I100000", "I1000000", "I10000000"):
+            arm = retrieval[arm_key]
+            assert arm["ivf_qps"] > arm["chunked_qps"], (arm_key, arm)
+            assert arm["ivf_speedup_median_vs_chunked"] > 1.0, (arm_key, arm)
+
+    def test_1m_acceptance_10x_at_recall_95(self, retrieval):
+        arm = retrieval["I1000000"]
+        assert arm["ivf_qps"] >= 10 * arm["chunked_qps"], arm
+        assert arm["ivf_recall_at_k"] >= 0.95, arm
+
+    def test_10m_arm_memory_shape(self, retrieval):
+        # the arm whose existence forced int8 codes + host re-rank: list
+        # width stays bounded (balance cap), recall stays usable
+        arm = retrieval["I10000000"]
+        assert arm["ivf_recall_at_k"] >= 0.95, arm
+        assert arm["ivf_lpad"] <= 1.5 * 10_000_000 / arm["ivf_nlist"], arm
+
+    def test_crossover_arm_recorded(self, retrieval):
+        # the honest small-table answer is "use chunked_topk"; keep the
+        # arm that documents where the line is
+        assert "I10000" in retrieval
+        assert retrieval["I10000"]["ivf_recall_at_k"] >= 0.90

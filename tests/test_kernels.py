@@ -161,6 +161,83 @@ class TestTopkOracle:
 
 
 @pytest.mark.quick
+class TestIVFListTopkOracle:
+    """ivf_list_topk_pallas against its CSR gather-then-score oracle (P003
+    pair): random ragged lists, exact-tie flats, and shortlist > candidate
+    filler. interpret=True exercises the same DMA/merge program the TPU
+    path compiles."""
+
+    def _case(self, seed, Q, P, d, lpad, rows):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-127, 128, size=(rows + lpad, d)).astype(np.int8)
+        scales = rng.uniform(0.5, 2.0, size=(rows + lpad, 1)).astype(np.float32)
+        q = rng.normal(size=(Q, d)).astype(np.float32)
+        starts = rng.integers(0, rows, size=(Q, P)).astype(np.int32)
+        lens = rng.integers(0, lpad + 1, size=(Q, P)).astype(np.int32)
+        # device arrays: the ref is the jitted production path, not a numpy fn
+        return tuple(jax.device_put(a) for a in (q, codes, scales, starts, lens))
+
+    @pytest.mark.parametrize("Q,P,lpad,shortlist", [(7, 3, 24, 16), (16, 5, 40, 64)])
+    def test_matches_ref(self, Q, P, lpad, shortlist):
+        from repro.kernels.ivf import ivf_list_topk_pallas
+
+        q, codes, scales, starts, lens = self._case(40 + Q, Q, P, 16, lpad, 300)
+        s0, r0 = ref.ivf_list_topk_ref(
+            q, codes, scales, starts, lens, lpad=lpad, shortlist=shortlist
+        )
+        s1, r1 = ivf_list_topk_pallas(
+            q, codes, scales, starts, lens,
+            lpad=lpad, shortlist=shortlist, interpret=True,
+        )
+        # dots accumulate in different orders (DMA'd block vs gathered
+        # rows): ulp-level score drift, identical candidate rows
+        np.testing.assert_allclose(
+            np.asarray(s0), np.asarray(s1), rtol=2e-5, atol=1e-4
+        )
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+    def test_tie_order_matches_flat_probe_order(self):
+        # all-equal scores: both paths must keep the flat (probe, within-
+        # list) order — the shared contract the exact re-rank builds on
+        from repro.kernels.ivf import ivf_list_topk_pallas
+
+        Q, P, d, lpad, rows = 4, 3, 8, 10, 60
+        codes = jax.device_put(np.ones((rows + lpad, d), np.int8))
+        scales = jax.device_put(np.ones((rows + lpad, 1), np.float32))
+        q = jax.device_put(np.ones((Q, d), np.float32))
+        rng = np.random.default_rng(9)
+        starts = jax.device_put(rng.integers(0, rows, size=(Q, P)).astype(np.int32))
+        lens = jax.device_put(rng.integers(1, lpad + 1, size=(Q, P)).astype(np.int32))
+        s0, r0 = ref.ivf_list_topk_ref(
+            q, codes, scales, starts, lens, lpad=lpad, shortlist=12
+        )
+        s1, r1 = ivf_list_topk_pallas(
+            q, codes, scales, starts, lens,
+            lpad=lpad, shortlist=12, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+
+    def test_filler_when_shortlist_exceeds_candidates(self):
+        from repro.kernels.ivf import ivf_list_topk_pallas
+
+        q, codes, scales, starts, _ = self._case(77, 3, 2, 8, 6, 50)
+        # 4 candidates < shortlist 10
+        lens = jax.device_put(np.full((3, 2), 2, np.int32))
+        s0, r0 = ref.ivf_list_topk_ref(
+            q, codes, scales, starts, lens, lpad=6, shortlist=10
+        )
+        s1, r1 = ivf_list_topk_pallas(
+            q, codes, scales, starts, lens,
+            lpad=6, shortlist=10, interpret=True,
+        )
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(r1))
+        assert np.isneginf(np.asarray(s1)[:, 4:]).all()
+        assert (np.asarray(r1)[:, 4:] == -1).all()
+
+
+@pytest.mark.quick
 class TestRowAdagradOracle:
     """row_adagrad_scatter_pallas against its oracle (P003 pair): distinct
     real ids, PADs first, untouched rows pass through."""

@@ -154,6 +154,14 @@ class TestHostSyncRules:
     def test_non_hot_module_clean(self, tmp_path):
         assert lint_snippet(tmp_path, "src/repro/models/foo.py", _HOT_SNIPPET) == []
 
+    def test_retrieval_and_infer_globs_are_hot(self, tmp_path):
+        # the serving path joined HOT_PATH_GLOBS with the ANN rebuild: a
+        # per-call host sync or re-upload there is the "IVF loses to brute
+        # force" class of bug, so the same rules fire
+        for rel in ("src/repro/retrieval/myindex.py", "src/repro/infer/myserve.py"):
+            got = lint_snippet(tmp_path, rel, _HOT_SNIPPET)
+            assert rule_ids(got) == ["H001", "H001", "H001", "H001", "H002"], rel
+
     def test_h002_hint_names_device_put(self, tmp_path):
         got = lint_snippet(tmp_path, "src/repro/sampling/fused.py", """\
             import jax

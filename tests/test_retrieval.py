@@ -207,6 +207,157 @@ class TestIVF:
             assert not set(row.tolist()) & set(exr[exr >= 0].tolist())
 
 
+class TestIVFQuantizedRerank:
+    """The rebuilt IVF path: int8 asymmetric shortlist + exact-dot re-rank.
+
+    At ``nprobe == nlist`` the shortlist is sized to the full probe budget,
+    so every candidate survives to the exact re-rank and the result must
+    match the brute-force oracle id-for-id — int8 quantization may only
+    reorder the shortlist, never the final ranking."""
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float16, np.float64])
+    def test_full_probe_exact_across_dtypes(self, dtype):
+        q, it, ex = _data(I=420, dtype=dtype)
+        idx = IVFIndex.build(it, IVFConfig(nlist=11, nprobe=11, seed=0))
+        s0, i0 = brute_force_topk(q, it, 17, exclude=ex)
+        s1, i1 = idx.search(q, 17, exclude=ex)
+        assert np.array_equal(i0, i1)
+        np.testing.assert_allclose(s0, s1, rtol=1e-5)
+
+    def test_tie_break_lower_id_wins_through_rerank(self):
+        # int-valued embeddings: many exact score ties, and the re-rank's
+        # f32 dots are exact, so scores AND ids must match the oracle
+        q, it, _ = _data(int_valued=True, d=6, I=300)
+        idx = IVFIndex.build(it, IVFConfig(nlist=7, nprobe=7, seed=0))
+        s0, i0 = brute_force_topk(q, it, 40)
+        s1, i1 = idx.search(q, 40)
+        assert np.array_equal(i0, i1)
+        assert np.array_equal(s0, s1)
+
+    def test_host_and_device_rerank_agree(self):
+        # keep_exact_device=False (the 10M mode: only int8 codes resident)
+        # re-ranks on host from the builder's numpy table; same results
+        q, it, ex = _data(I=350)
+        dev = IVFIndex.build(it, IVFConfig(nlist=9, nprobe=9, seed=0))
+        host = IVFIndex.build(
+            it, IVFConfig(nlist=9, nprobe=9, seed=0, keep_exact_device=False)
+        )
+        sd, idd = dev.search(q, 13, exclude=ex)
+        sh, ih = host.search(q, 13, exclude=ex)
+        assert np.array_equal(idd, ih)
+        np.testing.assert_allclose(sd, sh, rtol=1e-6)
+
+    def test_hier_assign_full_probe_stays_exact(self):
+        # hierarchical assignment approximates WHICH cell an item lands in,
+        # never whether it lands somewhere — exhaustive probing stays exact
+        q, it, ex = _data(I=500)
+        idx = IVFIndex.build(
+            it, IVFConfig(nlist=16, nprobe=16, seed=0, assign_mode="hier")
+        )
+        _, i0 = brute_force_topk(q, it, 19, exclude=ex)
+        _, i1 = idx.search(q, 19, exclude=ex)
+        assert np.array_equal(i0, i1)
+
+    def test_rerank_budget_respected_and_results_valid(self):
+        q, it, _ = _data(I=400)
+        idx = IVFIndex.build(it, IVFConfig(nlist=10, nprobe=4, rerank=32, seed=0))
+        s, i = idx.search(q, 20)
+        assert s.shape == (len(q), 20) and i.shape == (len(q), 20)
+        ok = i >= 0
+        assert np.isfinite(s[ok]).all() and np.isneginf(s[~ok]).all()
+
+    def test_build_deterministic(self):
+        # k-means reseed + vectorized spill are pure functions of the seed
+        _, it, _ = _data(I=700)
+        cfg = IVFConfig(nlist=12, nprobe=4, balance_factor=1.5, seed=0)
+        a = IVFIndex.build(it, cfg)
+        b = IVFIndex.build(it, cfg)
+        assert np.array_equal(a.order, b.order)
+        assert np.array_equal(a.offsets, b.offsets)
+        assert np.array_equal(a.codes, b.codes)
+        assert np.array_equal(a.scales, b.scales)
+
+    def test_spill_rank_rounds_cap_and_permutation(self):
+        # pathological input: every item assigned to one hot cell; the
+        # vectorized rank-round spill must end with every cell at <= cap,
+        # every item placed exactly once, deterministically
+        from repro.retrieval.ivf import _spill_hot_cells
+
+        rng = np.random.default_rng(6)
+        I, nlist, d = 400, 10, 8
+        norm = rng.normal(size=(I, d)).astype(np.float32)
+        norm /= np.linalg.norm(norm, axis=1, keepdims=True)
+        cent = rng.normal(size=(nlist, d)).astype(np.float32)
+        cent /= np.linalg.norm(cent, axis=1, keepdims=True)
+        assign = np.zeros(I, dtype=np.int64)
+        out = _spill_hot_cells(norm, cent, assign, cap=40)
+        counts = np.bincount(out, minlength=nlist)
+        assert counts.max() <= 40
+        assert counts.sum() == I
+        assert np.array_equal(out, _spill_hot_cells(norm, cent, assign, cap=40))
+
+    def test_config_validation(self):
+        it = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
+        with pytest.raises(ValueError, match="rerank"):
+            IVFIndex.build(it, IVFConfig(nlist=4, rerank=-1))
+        with pytest.raises(ValueError, match="assign_mode"):
+            IVFIndex.build(it, IVFConfig(nlist=4, assign_mode="fast"))
+        with pytest.raises(ValueError, match="backend"):
+            IVFIndex.build(it, IVFConfig(nlist=4, backend="cuda"))
+
+
+class TestIVFDeviceResidency:
+    """Device residency contract: build() uploads the table once; search()
+    only ever transfers queries/exclusions in and (Q, k) results out."""
+
+    def test_search_under_disallow_transfer_guard(self):
+        import jax
+
+        q, it, ex = _data(I=800)
+        idx = IVFIndex.build(it, IVFConfig(nlist=8, nprobe=3, seed=0))
+        warm = idx.search(q, 12, exclude=ex)  # compile outside the guard
+        with jax.transfer_guard("disallow"):  # implicit transfers -> error
+            s, i = idx.search(q, 12, exclude=ex)
+        assert np.array_equal(warm[1], i)
+        assert np.array_equal(warm[0], s)
+
+    def test_search_uploads_only_query_sized_arrays(self, monkeypatch):
+        import jax
+
+        q, it, ex = _data(I=1200)
+        idx = IVFIndex.build(it, IVFConfig(nlist=16, nprobe=4, seed=0))
+        idx.search(q, 9, exclude=ex)  # warm: jit cached, residency done
+        real = jax.device_put
+        put_bytes = []
+
+        def spy(x, *args, **kwargs):
+            put_bytes.append(getattr(x, "nbytes", 0))
+            return real(x, *args, **kwargs)
+
+        monkeypatch.setattr(jax, "device_put", spy)
+        idx.search(q, 9, exclude=ex)
+        assert put_bytes, "spy saw no uploads at all"
+        # nothing bigger than the query/exclusion batch — in particular
+        # never the codes, scales, or exact item table
+        assert max(put_bytes) <= max(q.nbytes, ex.nbytes), put_bytes
+
+    def test_chunked_topk_table_cached_across_calls(self, monkeypatch):
+        import jax
+
+        q, it, ex = _data(I=2000)
+        chunked_topk(q, it, 10, exclude=ex, item_chunk=256)  # populates cache
+        real = jax.device_put
+        put_bytes = []
+
+        def spy(x, *args, **kwargs):
+            put_bytes.append(getattr(x, "nbytes", 0))
+            return real(x, *args, **kwargs)
+
+        monkeypatch.setattr(jax, "device_put", spy)
+        chunked_topk(q, it, 10, exclude=ex, item_chunk=256)
+        assert put_bytes and max(put_bytes) <= max(q.nbytes, ex.nbytes)
+
+
 class TestRankedMetrics:
     def test_closed_form_values(self):
         # rec hits truth at ranks 0 and 2 of 4; |truth| = 3
